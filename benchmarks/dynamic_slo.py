@@ -1,0 +1,61 @@
+"""Paper Fig. 7/8/9: dynamic workload at arrival rate 1 (the paper's GPU
+saturation point), 7:3 RT:non-RT — SLO / TTFT / TPOT / deadline attainment
+and mean completion times for SLICE vs Orca vs FastServe, averaged over
+seeds."""
+from __future__ import annotations
+
+from benchmarks.common import emit, save_json
+from repro.core.latency_model import paper_fig1_model
+from repro.core.schedulers import FastServeScheduler, OrcaScheduler, SliceScheduler
+from repro.data.workload import poisson_workload
+from repro.serving.executor import SimExecutor
+from repro.serving.loop import run_serving_loop
+from repro.serving.metrics import summarize
+
+PAPER = {  # Fig. 7 headline numbers
+    "slice": {"all": 0.8333, "realtime": 0.8529, "non_realtime": 0.7815},
+    "orca": {"all": 0.3125}, "fastserve": {"all": 0.3125},
+}
+SEEDS = (3, 7, 11, 19)
+RATE = 1.0
+DURATION_S = 150
+
+
+def run():
+    lat = paper_fig1_model()
+    out = {}
+    for name, mk in [("slice", lambda: SliceScheduler(lat)),
+                     ("orca", OrcaScheduler), ("fastserve", FastServeScheduler)]:
+        agg = {}
+        for seed in SEEDS:
+            tasks = poisson_workload(RATE, DURATION_S, realtime_frac=0.7,
+                                     seed=seed)
+            res = run_serving_loop(mk(), SimExecutor(lat), tasks, max_ms=1e7)
+            s = summarize(res.tasks)
+            for grp, a in s.items():
+                g = agg.setdefault(grp, {"slo": [], "ttft": [], "tpot": [],
+                                         "compl": []})
+                g["slo"].append(a.slo)
+                g["ttft"].append(a.ttft)
+                g["tpot"].append(a.tpot)
+                if a.mean_completion_ms is not None:
+                    g["compl"].append(a.mean_completion_ms)
+        mean = lambda xs: sum(xs) / len(xs) if xs else None
+        out[name] = {grp: {k: mean(v) for k, v in g.items()}
+                     for grp, g in agg.items()}
+        for grp in ("all", "realtime", "non_realtime"):
+            r = out[name][grp]
+            paper = PAPER.get(name, {}).get(grp, "")
+            emit(f"fig7.{name}.{grp}.slo", round(r["slo"], 4),
+                 f"paper={paper} ttft={r['ttft']:.3f} tpot={r['tpot']:.3f}")
+            if r["compl"]:
+                emit(f"fig9.{name}.{grp}.completion_ms", round(r["compl"], 1))
+    # paper's headline ratios
+    ratio = out["slice"]["all"]["slo"] / max(out["orca"]["all"]["slo"], 1e-9)
+    emit("fig7.slice_vs_orca.ratio", round(ratio, 2), "paper=2.67x")
+    save_json("fig789_dynamic", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Paper Fig. 10: SLO attainment vs real-time task share (10%..90%) at
+arrival rate 1, for SLICE / Orca / FastServe."""
+from __future__ import annotations
+
+from benchmarks.common import emit, save_json
+from repro.core.latency_model import paper_fig1_model
+from repro.core.schedulers import FastServeScheduler, OrcaScheduler, SliceScheduler
+from repro.data.workload import poisson_workload
+from repro.serving.executor import SimExecutor
+from repro.serving.loop import run_serving_loop
+from repro.serving.metrics import summarize
+
+RATIOS = (0.1, 0.3, 0.5, 0.7, 0.9)
+SEEDS = (3, 7)
+RATE = 1.0
+DURATION_S = 120
+
+
+def run():
+    lat = paper_fig1_model()
+    out = {}
+    for ratio in RATIOS:
+        row = {}
+        for name, mk in [("slice", lambda: SliceScheduler(lat)),
+                         ("orca", OrcaScheduler),
+                         ("fastserve", FastServeScheduler)]:
+            vals = {"all": [], "realtime": [], "non_realtime": []}
+            for seed in SEEDS:
+                tasks = poisson_workload(RATE, DURATION_S,
+                                         realtime_frac=ratio, seed=seed)
+                res = run_serving_loop(mk(), SimExecutor(lat), tasks,
+                                       max_ms=1e7)
+                s = summarize(res.tasks)
+                for grp in vals:
+                    vals[grp].append(s[grp].slo)
+            row[name] = {g: sum(v) / len(v) for g, v in vals.items()}
+        out[str(ratio)] = row
+        adv = row["slice"]["all"] / max(row["orca"]["all"], 1e-9)
+        emit(f"fig10.rt_ratio_{ratio}.slice", round(row["slice"]["all"], 4),
+             f"rt={row['slice']['realtime']:.3f} nrt={row['slice']['non_realtime']:.3f}")
+        emit(f"fig10.rt_ratio_{ratio}.orca", round(row["orca"]["all"], 4),
+             f"slice_advantage={adv:.2f}x")
+    save_json("fig10_ratio_sweep", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

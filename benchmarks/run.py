@@ -1,0 +1,41 @@
+"""Benchmark harness — one function per paper table/figure.
+Prints ``name,value,derived`` CSV rows; JSON artifacts land in results/bench/.
+
+  PYTHONPATH=src python -m benchmarks.run [--skip-engine]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-engine", action="store_true",
+                    help="skip real-JAX-engine measurements (faster)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: fig1,table2,fig7,fig10,fig11")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import (dynamic_slo, latency_vs_batch, ratio_sweep,
+                            static_tpot, workload_sweep)
+
+    print("name,value,derived")
+    t0 = time.time()
+    if only is None or "fig1" in only:
+        latency_vs_batch.run(measure_engine=not args.skip_engine)
+    if only is None or "table2" in only:
+        static_tpot.run()
+    if only is None or "fig7" in only:
+        dynamic_slo.run()
+    if only is None or "fig10" in only:
+        ratio_sweep.run()
+    if only is None or "fig11" in only:
+        workload_sweep.run()
+    print(f"total_wall_s,{time.time() - t0:.1f},", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Paper Table II: static 9-task workload (3x A@100ms, 4x B@120ms, 2x C@250ms)
+under SLICE / Orca / FastServe — per-class actual TPOT, decode rate, and SLO
+attainment, compared against the paper's reported numbers."""
+from __future__ import annotations
+
+from benchmarks.common import emit, save_json
+from repro.core.latency_model import paper_fig1_model
+from repro.core.schedulers import FastServeScheduler, OrcaScheduler, SliceScheduler
+from repro.data.workload import static_table2_workload
+from repro.serving.executor import SimExecutor
+from repro.serving.loop import run_serving_loop
+from repro.serving.metrics import per_kind_tpot, summarize
+
+PAPER = {  # strategy -> kind -> (actual_tpot_ms, satisfied)
+    "orca": {"A": (128.59, False), "B": (128.59, False), "C": (128.59, True)},
+    "fastserve": {"A": (129.56, False), "B": (129.56, False), "C": (129.56, True)},
+    "slice": {"A": (94.03, True), "B": (106.65, True), "C": (121.11, True)},
+}
+PAPER_SLO = {"orca": 0.22, "fastserve": 0.22, "slice": 1.00}
+
+
+def run():
+    lat = paper_fig1_model()
+    out = {}
+    for name, mk in [("slice", lambda: SliceScheduler(lat)),
+                     ("orca", OrcaScheduler), ("fastserve", FastServeScheduler)]:
+        res = run_serving_loop(mk(), SimExecutor(lat), static_table2_workload())
+        rows = per_kind_tpot(res.tasks)
+        slo = summarize(res.tasks)["all"].slo
+        out[name] = {"per_kind": rows, "slo_attainment": slo}
+        for kind, r in rows.items():
+            paper_tpot, paper_ok = PAPER[name][kind]
+            emit(f"table2.{name}.{kind}.actual_tpot_ms",
+                 round(r["actual_tpot_ms"], 2),
+                 f"paper={paper_tpot} slo={r['tpot_slo_ms']}ms "
+                 f"satisfied={r['tpot_satisfied']} paper_satisfied={paper_ok}")
+        emit(f"table2.{name}.slo_attainment", round(slo, 4),
+             f"paper={PAPER_SLO[name]}")
+    save_json("table2_static_tpot", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Quickstart: serve a real (tiny) JAX model with SLICE.
+
+Builds a reduced smollm engine on CPU, measures its l(b) curve, and runs a
+mixed real-time + interactive workload through the SLICE scheduler —
+printing per-task SLO outcomes.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.configs import get_config
+from repro.core.schedulers import SliceScheduler
+from repro.core.task import control_task, qa_task, voice_task
+from repro.serving.executor import JaxExecutor
+from repro.serving.loop import run_serving_loop
+from repro.serving.metrics import summarize
+
+
+def main():
+    cfg = get_config("smollm-360m").reduced()
+    print(f"engine: {cfg.name} ({cfg.n_layers}L d={cfg.d_model})")
+    ex = JaxExecutor(cfg, max_slots=8, max_seq=256)
+    lat = ex.latency_model()
+    print("measured l(b):",
+          {b: round(lat.decode_ms(b), 2) for b in (1, 2, 4, 8)}, "ms")
+
+    tasks = [
+        control_task(arrival_ms=0, output_len=8, prompt_len=16,
+                     deadline_ms=1500),
+        voice_task(arrival_ms=5, output_len=24, prompt_len=24),
+        qa_task(arrival_ms=10, output_len=32, prompt_len=32),
+        control_task(arrival_ms=200, output_len=8, prompt_len=16,
+                     deadline_ms=1500),
+    ]
+    res = run_serving_loop(SliceScheduler(lat), ex, tasks)
+    print(f"\n{'kind':10s} {'ttft_ms':>8s} {'tpot_ms':>8s} {'slo':>5s}")
+    for t in res.tasks:
+        print(f"{t.kind:10s} {t.ttft_ms:8.1f} {t.tpot_measured_ms:8.2f} "
+              f"{'MET' if t.slo_met() else 'MISS':>5s}")
+    s = summarize(res.tasks)["all"]
+    print(f"\nSLO attainment: {s.slo * 100:.0f}%  "
+          f"({res.decode_iterations} decode iterations, "
+          f"{res.prefills} prefills)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""End-to-end training driver: train a ~100M-param SmolLM-family model for a
+few hundred steps on synthetic data (CPU-feasible), with checkpointing.
+
+  PYTHONPATH=src python examples/train_tiny.py [--steps 300] [--arch smollm-360m]
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models.model import ModelOptions
+from repro.training import checkpoint
+from repro.training.trainer import make_train_step
+
+
+def synthetic_batches(vocab: int, batch: int, seq: int, seed: int = 0):
+    """Markov-ish synthetic LM data (learnable structure, not pure noise)."""
+    key = jax.random.PRNGKey(seed)
+    while True:
+        key, k1, k2 = jax.random.split(key, 3)
+        base = jax.random.randint(k1, (batch, seq), 0, vocab)
+        shifted = jnp.roll(base, 1, axis=1) * 31 % vocab  # deterministic successor
+        mask = jax.random.bernoulli(k2, 0.8, (batch, seq))
+        toks = jnp.where(mask, shifted, base).astype(jnp.int32)
+        yield {"inputs": toks, "labels": toks}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--d-model", type=int, default=512,
+                    help="width override (~100M params at 512 for smollm)")
+    ap.add_argument("--layers", type=int, default=8)
+    ap.add_argument("--ckpt", default="results/train_tiny.npz")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    cfg = dataclasses.replace(
+        cfg, d_model=args.d_model, n_layers=args.layers, n_heads=8,
+        n_kv_heads=4, head_dim=64, d_ff=4 * args.d_model, vocab_size=8192)
+    from repro.configs.base import ArchConfig  # param count report
+    print(f"training {cfg.name}: L={cfg.n_layers} d={cfg.d_model} "
+          f"params~{cfg.n_params() / 1e6:.1f}M")
+
+    init_state, train_step = make_train_step(
+        cfg, ModelOptions(), peak_lr=3e-4, warmup=20, total=args.steps)
+    state = init_state(jax.random.PRNGKey(0))
+    step_fn = jax.jit(train_step)
+    data = synthetic_batches(cfg.vocab_size, args.batch, args.seq)
+    t0 = time.time()
+    loss0 = None
+    for i in range(args.steps):
+        state, m = step_fn(state, next(data))
+        if i == 0:
+            loss0 = float(m["loss"])
+        if i % 20 == 0 or i == args.steps - 1:
+            print(f"step {i:4d} loss={float(m['loss']):.4f} "
+                  f"gnorm={float(m['grad_norm']):.3f} "
+                  f"({(time.time() - t0):.1f}s)")
+    final = float(m["loss"])
+    print(f"\nloss {loss0:.3f} -> {final:.3f} "
+          f"({'improved' if final < loss0 else 'NO IMPROVEMENT'})")
+    checkpoint.save(args.ckpt, state[0])
+    restored = checkpoint.restore(args.ckpt, state[0])
+    assert jax.tree.all(jax.tree.map(
+        lambda a, b: jnp.allclose(a, b), state[0], restored))
+    print(f"checkpoint round-trip OK -> {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.configs.base import ArchConfig, InputShape, SHAPES, SHAPE_BY_NAME
+from repro.configs.registry import (
+    ASSIGNED_ARCHS, get_config, get_shape, list_archs, supported_pairs,
+)

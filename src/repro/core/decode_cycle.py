@@ -1,0 +1,67 @@
+"""The SLICE scheduling cycle as a single compiled JAX program.
+
+The host-side rate allocator (schedulers.SliceScheduler) issues one decode
+step per mask column; that is faithful to the paper's C++ implementation but
+pays a host->device round-trip per column. Here the WHOLE cycle — column
+scan, per-column active masking, token emission — is one ``jax.lax.scan``
+over the decode-mask matrix, compiled once per (batch_slots, v0) bucket:
+
+    tokens_out[c, s] = token decoded at column c for slot s (or -1)
+
+This is the TPU-native form of Algorithm 3's decoding execution loop
+(lines 12-33): the decode-mask column IS the active-slot mask of the
+fixed-shape decode step. Early-exit on finished slots is handled by masking
+(finished slots' columns are zeroed by the caller on reschedule).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import model as M
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "opts"))
+def decode_cycle(cfg: ArchConfig, params, cache, tokens: jnp.ndarray,
+                 mask: jnp.ndarray, eos_id: int = -1,
+                 opts: M.ModelOptions = M.ModelOptions()
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray, M.Cache]:
+    """Run one full scheduling cycle.
+
+    params/cache: engine state for ``batch`` slots; tokens: [B] last token
+    per slot; mask: [B, v0] decode-mask matrix mapped to slots (row = slot).
+    Returns (tokens_out [v0, B] with -1 for inactive, last_tokens [B], cache).
+
+    A slot that emits ``eos_id`` stops participating in later columns of the
+    cycle (Alg. 3 lines 20-24) — implemented by carrying a live-mask.
+    """
+    B, v0 = mask.shape
+    cols = mask.T.astype(bool)                       # [v0, B]
+
+    def step(carry, col):
+        cache, tokens, live = carry
+        active = col & live
+        logits, cache = M.decode_step(cfg, params, cache, tokens,
+                                      active=active, opts=opts)
+        new = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        tokens = jnp.where(active, new, tokens)
+        emitted = jnp.where(active, new, -1)
+        live = live & ~(active & (new == eos_id))
+        return (cache, tokens, live), emitted
+
+    live0 = jnp.ones((B,), bool)
+    (cache, tokens, _), out = jax.lax.scan(step, (cache, tokens, live0), cols)
+    return out, tokens, cache
+
+
+def cycle_throughput_estimate(mask: jnp.ndarray, lat_table: jnp.ndarray
+                              ) -> jnp.ndarray:
+    """Eq. 7 on-device: cycle duration (ms) of an arbitrary mask under a
+    latency table l[b]."""
+    counts = mask.astype(jnp.int32).sum(0)           # [v0]
+    return jnp.take(lat_table,
+                    jnp.clip(counts, 0, lat_table.shape[0] - 1)).sum()

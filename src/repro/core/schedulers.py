@@ -1,0 +1,320 @@
+"""Schedulers: SLICE (Algorithms 1-4), Orca, FastServe — one interface.
+
+The serving loop (repro.serving.loop) drives a scheduler with:
+    on_arrival(task, now) / on_finish(task, now)
+    next_action(now) -> PrefillAction | DecodeAction | None
+Each DecodeAction is ONE decode iteration (one token for every task in the
+batch) — Orca-style iteration-level scheduling for all three policies; they
+differ in admission and batch composition.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.latency_model import LatencyModel
+from repro.core.mask_matrix import (build_mask_matrix, column_batches,
+                                    mask_matrix_period_ms, quantized_rate,
+                                    stagger_columns)
+from repro.core.selection import PERIOD_BUDGET_MS, task_selection
+from repro.core.task import Task
+
+
+@dataclasses.dataclass
+class PrefillAction:
+    task: Task
+
+
+@dataclasses.dataclass
+class DecodeAction:
+    tasks: List[Task]
+
+
+class Scheduler:
+    name = "base"
+
+    def on_arrival(self, task: Task, now: float) -> None:
+        raise NotImplementedError
+
+    def on_finish(self, task: Task, now: float) -> None:
+        pass
+
+    def next_action(self, now: float):
+        raise NotImplementedError
+
+    def unfinished(self) -> int:
+        raise NotImplementedError
+
+
+# --------------------------------------------------------------------- SLICE
+
+class SliceScheduler(Scheduler):
+    """SLICE-online (Algorithm 4) wrapping SLICE-offline (Algorithms 1-3).
+
+    Arrival/completion events set a reschedule flag (the paper's eventQ);
+    the next ``next_action`` call then re-runs task selection (Alg. 2),
+    applies the UtilityAdaptor (preemption controller), rebuilds the
+    decode-mask matrix (Alg. 3) and restarts column scanning.
+    """
+    name = "slice"
+
+    def __init__(self, lat: LatencyModel, budget_ms: float = PERIOD_BUDGET_MS,
+                 utility_adaptor: Optional[Callable[[Sequence[Task]], None]] = None,
+                 drop_expired_realtime: bool = True,
+                 stagger: bool = False, prefill_headroom: bool = True):
+        self.lat = lat
+        self.budget_ms = budget_ms
+        self.utility_adaptor = utility_adaptor
+        self.drop_expired_realtime = drop_expired_realtime
+        self.stagger = stagger
+        # Beyond-paper: Eq. 7 budgets decode columns only, but prefills of
+        # arriving tasks also consume engine time inside a cycle. Reserve
+        # E[arrival rate] * E[prefill ms] of headroom so the *delivered*
+        # cycle still fits 1000 ms (EXPERIMENTS.md §Perf, hypothesis P1).
+        self.prefill_headroom = prefill_headroom
+        self._arr_times: List[float] = []
+        self._prefill_ewma: float = 0.0
+        self.pool: List[Task] = []          # unscheduled, unfinished
+        self.batch: List[Task] = []         # selected (sorted by rate desc)
+        self.mask: Optional[np.ndarray] = None
+        self.col = 0
+        self.need_resched = True
+        self.prefill_queue: List[Task] = []
+        # per-cycle token credit: reschedules rebuild the mask from REMAINING
+        # quotas so restarting the column scan never re-delivers tokens a task
+        # already received this cycle (Alg. 4 restarts at column 0; without
+        # credit, frequent arrivals would over-serve lax tasks and starve the
+        # private tail columns of strict tasks — see EXPERIMENTS.md §Perf).
+        self.delivered: dict = {}           # task_id -> tokens this cycle
+
+    # -- events (Alg. 4 lines 7-14) --
+    def on_arrival(self, task: Task, now: float) -> None:
+        self.pool.append(task)
+        self.need_resched = True
+        self._arr_times.append(now)
+        self._arr_times = self._arr_times[-32:]
+        p = self.lat.prefill_ms(task.prompt_len)
+        self._prefill_ewma = (0.8 * self._prefill_ewma + 0.2 * p
+                              if self._prefill_ewma else p)
+
+    def _headroom_ms(self) -> float:
+        if not self.prefill_headroom or len(self._arr_times) < 4:
+            return 0.0
+        span = self._arr_times[-1] - self._arr_times[0]
+        if span <= 0:
+            return 0.0
+        lam = (len(self._arr_times) - 1) / span          # arrivals per ms
+        return min(0.5 * self.budget_ms,
+                   lam * self._prefill_ewma * self.budget_ms)
+
+    def on_finish(self, task: Task, now: float) -> None:
+        self.need_resched = True
+
+    def _drop_hopeless(self, now: float) -> None:
+        """Deadline-feasibility pruning (beyond-paper): a real-time task whose
+        remaining tokens cannot fit in its remaining deadline budget — even at
+        its full SLO rate — is already a violation; dropping it immediately
+        frees cycle capacity for still-feasible tasks."""
+        if not self.drop_expired_realtime:
+            return
+        for t in list(self.batch) + self.pool:
+            if not t.slo.realtime or t.finished:
+                continue
+            remaining_ms = t.slo.deadline_ms - (now - t.arrival_ms)
+            need_ms = (t.output_len - t.tokens_done) * t.slo.tpot_ms
+            if t.tokens_done == 0:
+                need_ms += self.lat.prefill_ms(t.prompt_len)
+            if need_ms > remaining_ms:
+                t.dropped = True
+        self.pool = [t for t in self.pool if not t.dropped]
+
+    def _reschedule(self, now: float) -> None:
+        # fold still-running unfinished tasks back into the pool (Alg. 1
+        # returns them; Alg. 4 re-enters them into selection)
+        live = [t for t in self.batch if not t.finished and not t.dropped]
+        self.pool = [t for t in self.pool if not t.finished and not t.dropped]
+        candidates = live + [t for t in self.pool if t not in live]
+        if self.utility_adaptor is not None:
+            self.utility_adaptor(candidates)        # Alg. 4 line 17
+        self._drop_hopeless(now)
+        candidates = [t for t in candidates if not t.dropped]
+        selected, rest = task_selection(candidates, self.lat,
+                                        self.budget_ms - self._headroom_ms())
+        self.batch = sorted(selected, key=lambda t: -quantized_rate(t.slo.tpot_ms))
+        self.pool = rest
+        live_ids = {t.task_id for t in self.batch}
+        self.delivered = {k: v for k, v in self.delivered.items() if k in live_ids}
+        self._build_mask(remaining=True)
+        self.prefill_queue = [t for t in self.batch if t.prefill_done_ms is None]
+        self.prefill_queue.sort(key=lambda t: -t.effective_utility)
+        self.need_resched = False
+
+    def _build_mask(self, remaining: bool) -> None:
+        """Rebuild the decode-mask matrix; with remaining=True, row quotas are
+        v_i minus tokens already delivered this cycle (credit carry-over)."""
+        rates = []
+        for t in self.batch:
+            v = quantized_rate(t.slo.tpot_ms)
+            if remaining:
+                v -= self.delivered.get(t.task_id, 0)
+            rates.append(max(v, 0))
+        order = np.argsort([-r for r in rates], kind="stable")
+        self.batch = [self.batch[i] for i in order]
+        rates = [rates[i] for i in order]
+        rates_nz = [r for r in rates if r > 0]
+        self.mask = build_mask_matrix(rates_nz) if rates_nz else None
+        if self.mask is not None and self.stagger:
+            cand = stagger_columns(self.mask)
+            if mask_matrix_period_ms(cand, self.lat) < self.budget_ms:
+                self.mask = cand
+        self.col = 0
+
+    def _new_cycle(self) -> None:
+        self.delivered = {}
+        self._build_mask(remaining=False)
+
+    def next_action(self, now: float):
+        if self.need_resched:
+            self._reschedule(now)
+        if self.prefill_queue:
+            return PrefillAction(self.prefill_queue.pop(0))
+        if not self.batch:
+            return None
+        if self.mask is None:       # all quotas consumed -> next cycle
+            self._new_cycle()
+        if self.mask is None:
+            return None
+        # column scan (Alg. 3 lines 12-33); scanning past the last column
+        # completes the cycle and rebuilds the full-quota matrix.
+        for _ in range(self.mask.shape[1] + 1):
+            if self.col >= self.mask.shape[1]:
+                self._new_cycle()
+                if self.mask is None:
+                    return None
+            rows = np.nonzero(self.mask[:, self.col])[0]
+            self.col += 1
+            tasks = [self.batch[r] for r in rows if not self.batch[r].finished]
+            if tasks:
+                for t in tasks:
+                    self.delivered[t.task_id] = self.delivered.get(t.task_id, 0) + 1
+                return DecodeAction(tasks)
+        return None
+
+    def unfinished(self) -> int:
+        return sum(1 for t in self.batch + self.pool
+                   if not t.finished and not t.dropped)
+
+
+def sjf_decay_adaptor(half_life_tokens: float = 64.0):
+    """Preemption-controller example (paper §IV-E): decay utility of tasks
+    that have already produced many tokens -> long jobs lose admission to
+    newcomers, mimicking SJF and avoiding head-of-line blocking."""
+    def adapt(tasks: Sequence[Task]) -> None:
+        for t in tasks:
+            t.effective_utility = t.utility * 0.5 ** (t.tokens_done / half_life_tokens)
+    return adapt
+
+
+# ---------------------------------------------------------------------- Orca
+
+class OrcaScheduler(Scheduler):
+    """Orca: FCFS admission + iteration-level dynamic batching. Every admitted
+    task joins every decode iteration (the paper's 'coarse-grained' batching).
+    """
+    name = "orca"
+
+    def __init__(self, max_batch: int = 32):
+        self.max_batch = max_batch
+        self.waiting: List[Task] = []
+        self.running: List[Task] = []
+
+    def on_arrival(self, task: Task, now: float) -> None:
+        self.waiting.append(task)
+
+    def on_finish(self, task: Task, now: float) -> None:
+        if task in self.running:
+            self.running.remove(task)
+
+    def next_action(self, now: float):
+        self.running = [t for t in self.running if not t.finished]
+        if self.waiting and len(self.running) < self.max_batch:
+            return PrefillAction(self.waiting.pop(0))  # FCFS
+        if self.running:
+            return DecodeAction(list(self.running))
+        return None
+
+    def note_prefilled(self, task: Task) -> None:
+        self.running.append(task)
+
+    def unfinished(self) -> int:
+        return len(self.waiting) + sum(1 for t in self.running if not t.finished)
+
+
+# ----------------------------------------------------------------- FastServe
+
+class FastServeScheduler(Scheduler):
+    """FastServe: skip-join MLFQ with iteration-level preemption.
+
+    Tasks enter the queue whose quantum covers their prompt length (skip-join)
+    and are demoted once they exceed the current queue's token quantum. Each
+    iteration decodes the top max_batch tasks by (queue priority, arrival) —
+    under edge loads this merges everything into one batch, reproducing the
+    paper's observation that FastServe == Orca there.
+    """
+    name = "fastserve"
+
+    def __init__(self, max_batch: int = 32, n_queues: int = 4,
+                 base_quantum: int = 16):
+        self.max_batch = max_batch
+        self.n_queues = n_queues
+        self.base_quantum = base_quantum
+        self.waiting: List[Task] = []
+        self.running: List[Task] = []      # prefilled, unfinished
+        self.queue_of = {}                 # task_id -> queue index
+        self.tokens_in_queue = {}          # task_id -> tokens since demotion
+
+    def _quantum(self, q: int) -> int:
+        return self.base_quantum * (2 ** q)
+
+    def _skip_join_queue(self, task: Task) -> int:
+        q = 0
+        while q < self.n_queues - 1 and task.prompt_len > self._quantum(q):
+            q += 1
+        return q
+
+    def on_arrival(self, task: Task, now: float) -> None:
+        self.waiting.append(task)
+
+    def on_finish(self, task: Task, now: float) -> None:
+        if task in self.running:
+            self.running.remove(task)
+
+    def note_prefilled(self, task: Task) -> None:
+        self.running.append(task)
+        self.queue_of[task.task_id] = self._skip_join_queue(task)
+        self.tokens_in_queue[task.task_id] = 0
+
+    def _priority(self, t: Task):
+        return (self.queue_of[t.task_id], t.arrival_ms, t.task_id)
+
+    def next_action(self, now: float):
+        self.running = [t for t in self.running if not t.finished]
+        if self.waiting:
+            return PrefillAction(self.waiting.pop(0))
+        if not self.running:
+            return None
+        batch = sorted(self.running, key=self._priority)[: self.max_batch]
+        for t in batch:  # quantum accounting + demotion
+            tid = t.task_id
+            self.tokens_in_queue[tid] += 1
+            if (self.tokens_in_queue[tid] >= self._quantum(self.queue_of[tid])
+                    and self.queue_of[tid] < self.n_queues - 1):
+                self.queue_of[tid] += 1
+                self.tokens_in_queue[tid] = 0
+        return DecodeAction(batch)
+
+    def unfinished(self) -> int:
+        return len(self.waiting) + sum(1 for t in self.running if not t.finished)

@@ -1,0 +1,48 @@
+"""Task selection (paper §IV-C, Algorithm 2): utility-rate greedy admission
+under the 1000 ms cycle-period capacity test (Eq. 7).
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+from repro.core.latency_model import LatencyModel
+from repro.core.mask_matrix import estimate_period_ms, quantized_rate
+from repro.core.task import Task
+
+PERIOD_BUDGET_MS = 1000.0
+
+
+def task_selection(tasks: Sequence[Task], lat: LatencyModel,
+                   budget_ms: float = PERIOD_BUDGET_MS
+                   ) -> Tuple[List[Task], List[Task]]:
+    """Algorithm 2. Returns (selected batch b, remaining pool N).
+
+    Step 1: utility rate r_i = U_i * T_TPOT_i (Eq. 6).
+    Step 2: non-replacement greedy — admit tasks by descending r_i while the
+    estimated cycle period (Eq. 7, over the batch sorted by rate descending)
+    stays under budget; the first violating task is returned to the pool and
+    iteration stops.
+    """
+    pool = sorted(tasks, key=lambda t: (-t.utility_rate, t.arrival_ms, t.task_id))
+    selected: List[Task] = []
+    rates: List[int] = []
+    for i, t in enumerate(pool):
+        cand = rates + [quantized_rate(t.slo.tpot_ms)]
+        cand.sort(reverse=True)  # sortTasksBySLORateDescending (Alg.2 line 11)
+        if estimate_period_ms(cand, lat) >= budget_ms:
+            return selected, pool[i:]
+        selected.append(t)
+        rates = cand
+    return selected, []
+
+
+def selection_feasible(selected: Sequence[Task], lat: LatencyModel,
+                       budget_ms: float = PERIOD_BUDGET_MS) -> bool:
+    rates = sorted((quantized_rate(t.slo.tpot_ms) for t in selected),
+                   reverse=True)
+    return estimate_period_ms(rates, lat) < budget_ms if rates else True
+
+
+def total_utility(selected: Sequence[Task]) -> float:
+    """Objective Eq. (1) assuming every admitted task meets its SLO."""
+    return sum(t.effective_utility for t in selected)

@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: GQA flash-decode over a (ring-buffer) KV cache.
+
+One new token per sequence attends over S cached KV entries. TPU-native
+adaptation: the KV stream is blocked over the last grid axis; a running
+(m, l, acc) online-softmax state lives in VMEM scratch and is finalized on
+the last block — the classic flash-decode contraction, tiled so each step
+is a [g, hd] x [hd, blk] MXU matmul (g = query heads per KV head).
+
+Grid: (batch, kv_heads, S // blk) — the KV axis is innermost so the scratch
+accumulator is reused sequentially per (b, h).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(qpos_ref, q_ref, k_ref, v_ref, kvpos_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, window, scale):
+    j = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # [g, hd]
+    k = k_ref[0, 0].astype(jnp.float32)          # [blk, hd]
+    v = v_ref[0, 0].astype(jnp.float32)          # [blk, hd]
+    pos = kvpos_ref[0]                           # [blk] int32
+    qp = qpos_ref[0]                             # scalar int32
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    keep = (pos >= 0) & (pos <= qp)
+    if window is not None:
+        keep &= (qp - pos) < window
+    s = jnp.where(keep[None, :], s, NEG_INF)     # [g, blk]
+
+    m_prev = m_ref[:, :1]                        # [g, 1]
+    l_prev = l_ref[:, :1]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)   # [g, 1]
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                       # [g, blk]
+    # fully-masked block: m_new == NEG_INF makes exp(s - m_new) == 1 for
+    # masked lanes — re-mask so they contribute nothing.
+    p = jnp.where(keep[None, :], p, 0.0)
+    corr = jnp.exp(m_prev - m_new)               # [g, 1]
+    l_new = l_prev * corr + jnp.sum(p, -1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(j == nk - 1)
+    def _fin():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[:, :1], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_kernel(q, k_cache, v_cache, kv_pos, q_pos,
+                            window=None, blk: int = 256,
+                            interpret: bool = False):
+    """q: [B,Hq,hd]; k/v_cache: [B,Hkv,S,hd]; kv_pos: [B,S]; q_pos: [B].
+    Returns [B,Hq,hd]. S must be a multiple of blk (pad kv_pos with -1)."""
+    B, Hq, hd = q.shape
+    Hkv, S = k_cache.shape[1], k_cache.shape[2]
+    g = Hq // Hkv
+    assert S % blk == 0, (S, blk)
+    qg = q.reshape(B, Hkv, g, hd)
+    grid = (B, Hkv, S // blk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, window=window, scale=hd ** -0.5),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, j: (b,)),                # q_pos
+            pl.BlockSpec((1, 1, g, hd), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, blk, hd), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, blk, hd), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, blk), lambda b, h, j: (b, j)),          # kv_pos
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, g, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 128), jnp.float32),   # running max
+            pltpu.VMEM((g, 128), jnp.float32),   # running denom
+            pltpu.VMEM((g, hd), jnp.float32),    # running numerator
+        ],
+        interpret=interpret,
+    )(q_pos.astype(jnp.int32), qg, k_cache, v_cache, kv_pos.astype(jnp.int32))
+    return out.reshape(B, Hq, hd)

@@ -1,0 +1,69 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode — the kernel
+body runs in Python for correctness validation; on TPU they compile to
+Mosaic. ``interpret=None`` auto-selects by backend.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as _da
+from repro.kernels import flash_prefill as _fp
+from repro.kernels import ssd_scan as _ssd
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+@functools.partial(jax.jit, static_argnames=("window", "blk", "interpret"))
+def decode_attention(q, k_cache, v_cache, kv_pos, q_pos, *, window=None,
+                     blk: int = 256, interpret: Optional[bool] = None):
+    S = k_cache.shape[2]
+    blk = min(blk, S)
+    pad = (-S) % blk
+    if pad:
+        cfg = [(0, 0), (0, 0), (0, pad), (0, 0)]
+        k_cache = jnp.pad(k_cache, cfg)
+        v_cache = jnp.pad(v_cache, cfg)
+        kv_pos = jnp.pad(kv_pos, [(0, 0), (0, pad)], constant_values=-1)
+    return _da.decode_attention_kernel(q, k_cache, v_cache, kv_pos, q_pos,
+                                       window=window, blk=blk,
+                                       interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "qblk",
+                                             "kblk", "interpret"))
+def flash_prefill(q, k, v, *, causal: bool = True, window=None,
+                  qblk: int = 128, kblk: int = 128,
+                  interpret: Optional[bool] = None):
+    S = q.shape[1]
+    qblk, kblk = min(qblk, S), min(kblk, S)
+    assert S % qblk == 0 and S % kblk == 0, "pad sequence to block multiple"
+    return _fp.flash_prefill_kernel(q, k, v, causal=causal, window=window,
+                                    qblk=qblk, kblk=kblk,
+                                    interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, a_log, b, c, d_skip, dt_bias, *, chunk: int = 64,
+             interpret: Optional[bool] = None):
+    T = x.shape[1]
+    chunk = min(chunk, T)
+    pad = (-T) % chunk
+    if pad:
+        x = jnp.pad(x, [(0, 0), (0, pad), (0, 0), (0, 0)])
+        dt = jnp.pad(dt, [(0, 0), (0, pad), (0, 0)], constant_values=-1e9)
+        b = jnp.pad(b, [(0, 0), (0, pad), (0, 0)])
+        c = jnp.pad(c, [(0, 0), (0, pad), (0, 0)])
+    y, h = _ssd.ssd_scan_kernel(x, dt, a_log, b, c, d_skip, dt_bias,
+                                chunk=chunk,
+                                interpret=_auto_interpret(interpret))
+    return y[:, :T], h

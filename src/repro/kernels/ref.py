@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel (single source of truth shared
+with the model code)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.models.layers import attention, band_mask, decode_attention
+from repro.models.ssm import ssd_chunked
+
+
+def decode_attention_ref(q, k_cache, v_cache, kv_pos, q_pos, window=None):
+    """Same contract as kernels.decode_attention.decode_attention_kernel."""
+    return decode_attention(q, k_cache, v_cache, kv_pos, q_pos, window)
+
+
+def flash_prefill_ref(q, k, v, causal=True, window=None):
+    """Same contract as kernels.flash_prefill.flash_prefill_kernel."""
+    S = q.shape[1]
+    pos = jnp.arange(S)
+    mask = band_mask(pos, pos, causal, window)
+    return attention(q, k, v, mask)
+
+
+def ssd_scan_ref(x, dt, a_log, b, c, d_skip, dt_bias, chunk: int = 64):
+    """Same contract as kernels.ssd_scan.ssd_scan_kernel."""
+    return ssd_chunked(x, dt, a_log, b, c, d_skip, dt_bias, chunk=chunk)
+
+
+def ssd_scan_sequential_ref(x, dt, a_log, b, c, d_skip, dt_bias):
+    """O(T) sequential recurrence — the ground-truth oracle for both the
+    chunked jnp form and the Pallas kernel."""
+    import jax
+
+    B, T, H, P = x.shape
+    N = b.shape[-1]
+    A = -jnp.exp(a_log.astype(jnp.float32))
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + dt_bias)
+
+    def step(h, t):
+        g = jnp.exp(dtp[:, t] * A)
+        h = h * g[..., None, None] + jnp.einsum(
+            "bhp,bn,bh->bhpn", x[:, t].astype(jnp.float32),
+            b[:, t].astype(jnp.float32), dtp[:, t])
+        y = jnp.einsum("bhpn,bn->bhp", h, c[:, t].astype(jnp.float32))
+        y = y + x[:, t].astype(jnp.float32) * d_skip[None, :, None]
+        return h, y
+
+    h = jnp.zeros((B, H, P, N), jnp.float32)
+    ys = []
+    for t in range(T):
+        h, y = step(h, t)
+        ys.append(y)
+    return jnp.stack(ys, 1).astype(x.dtype), h

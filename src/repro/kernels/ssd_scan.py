@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: Mamba2 SSD (state-space duality) chunked scan.
+
+Grid: (B, H, T // chunk) — chunks innermost, the [P, N] running state lives
+in VMEM scratch and is carried across chunk steps (a sequential scan on the
+grid, the TPU-idiomatic replacement for the CUDA chunk-parallel two-pass formulation:
+on TPU the grid is executed in order per (b, h), so the inter-chunk
+recurrence costs nothing extra, while each chunk's intra term is dense
+[chunk, chunk] x [chunk, P] MXU work).
+
+Computes, per head:  h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t,
+                     y_t = C_t h_t + D x_t
+in the dual (quasi-attention) form within each chunk.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, dskip_ref, dtb_ref, x_ref, dt_ref, b_ref, c_ref,
+            y_ref, hout_ref, state_ref, *, chunk):
+    cj = pl.program_id(2)
+    nc = pl.num_programs(2)
+    h = pl.program_id(1)
+
+    @pl.when(cj == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    A = -jnp.exp(a_ref[0].astype(jnp.float32))          # scalar
+    dt = jax.nn.softplus(dt_ref[0, 0].astype(jnp.float32)
+                         + dtb_ref[0].astype(jnp.float32))   # [chunk]
+    x = x_ref[0, 0].astype(jnp.float32)                 # [chunk, P]
+    b = b_ref[0].astype(jnp.float32)                    # [chunk, N]
+    c = c_ref[0].astype(jnp.float32)                    # [chunk, N]
+
+    dA = dt * A                                         # [chunk]
+    cum = jnp.cumsum(dA)                                # [chunk]
+    # intra-chunk dual form
+    seg = cum[:, None] - cum[None, :]                   # [q, k]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    seg = jnp.where(ii >= jj, seg, -jnp.inf)
+    L = jnp.exp(seg)
+    cb = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [q, k]
+    att = cb * L                                        # [q, k]
+    xdt = x * dt[:, None]                               # [k, P]
+    y = jax.lax.dot_general(att, xdt, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # [q, P]
+    # inter-chunk: previous state decayed into each position
+    h_prev = state_ref[...]                             # [P, N]
+    decay_in = jnp.exp(cum)                             # [q]
+    cd = c * decay_in[:, None]                          # [q, N]
+    y += jax.lax.dot_general(cd, h_prev, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [q, P]
+    y += x * dskip_ref[0].astype(jnp.float32)
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+    # state update: h' = exp(sum dA) h + sum_k decay_to_end_k dt_k x_k B_k
+    decay_end = jnp.exp(cum[-1] - cum)                  # [k]
+    xw = x * (dt * decay_end)[:, None]                  # [k, P]
+    new_state = jnp.exp(cum[-1]) * h_prev + jax.lax.dot_general(
+        xw, b, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    state_ref[...] = new_state
+
+    @pl.when(cj == nc - 1)
+    def _fin():
+        hout_ref[0, 0] = new_state.astype(hout_ref.dtype)
+
+
+def ssd_scan_kernel(x, dt, a_log, b, c, d_skip, dt_bias, chunk: int = 64,
+                    interpret: bool = False):
+    """x: [B,T,H,P]; dt: [B,T,H]; b,c: [B,T,N]; a_log/d_skip/dt_bias: [H].
+    Returns (y [B,T,H,P], final_state [B,H,P,N]). T % chunk == 0."""
+    B, T, H, P = x.shape
+    N = b.shape[-1]
+    assert T % chunk == 0, (T, chunk)
+    nc = T // chunk
+    xt = x.transpose(0, 2, 1, 3)       # [B,H,T,P]
+    dtt = dt.transpose(0, 2, 1)        # [B,H,T]
+    grid = (B, H, nc)
+    y, hout = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda bb, hh, jj: (hh,)),          # a_log
+            pl.BlockSpec((1,), lambda bb, hh, jj: (hh,)),          # d_skip
+            pl.BlockSpec((1,), lambda bb, hh, jj: (hh,)),          # dt_bias
+            pl.BlockSpec((1, 1, chunk, P), lambda bb, hh, jj: (bb, hh, jj, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda bb, hh, jj: (bb, hh, jj)),
+            pl.BlockSpec((1, chunk, N), lambda bb, hh, jj: (bb, jj, 0)),
+            pl.BlockSpec((1, chunk, N), lambda bb, hh, jj: (bb, jj, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, P), lambda bb, hh, jj: (bb, hh, jj, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda bb, hh, jj: (bb, hh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, T, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(a_log, d_skip, dt_bias, xt, dtt, b, c)
+    return y.transpose(0, 2, 1, 3), hout

@@ -1,0 +1,200 @@
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell with 512 placeholder host devices, record memory/cost/collective
+analysis for the roofline report.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape decode_32k --mesh pod
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+# The VERY FIRST two lines — before ANY other import (jax locks the device
+# count on first init):
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ASSIGNED_ARCHS, SHAPES, get_config, get_shape
+from repro.configs.base import ArchConfig, InputShape
+from repro.launch import sharding as SH
+from repro.launch import specs as SP
+from repro.launch.hlo_stats import collective_bytes
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.models.partitioning import activation_partitioning
+from repro.launch.mesh import batch_axes
+
+
+def build_cell(cfg: ArchConfig, shape: InputShape, mesh,
+               opts: Optional[M.ModelOptions] = None):
+    """Returns (fn, args tuple of ShapeDtypeStructs, in_shardings)."""
+    opts = opts or M.ModelOptions(remat=(shape.kind == "train"))
+    params = SP.param_specs_struct(cfg)
+    p_spec = SH.param_specs(cfg, mesh, train=(shape.kind == "train"))
+    p_shard = SH.to_shardings(mesh, p_spec)
+    ins = SP.input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        from repro.training.optimizer import adamw
+        from repro.training.trainer import make_train_step
+        _, train_step = make_train_step(cfg, opts)
+        opt_init, _ = adamw(1e-4)
+        opt_struct = jax.eval_shape(opt_init, params)
+        state = (params, opt_struct)
+        state_spec = (p_spec, SH.opt_state_specs(p_spec))
+        batch = {"inputs": ins["inputs"], "labels": ins["labels"]}
+        batch_spec = {
+            "inputs": SH.batch_spec(mesh, shape.global_batch, ins["inputs"].ndim),
+            "labels": SH.batch_spec(mesh, shape.global_batch, 2),
+        }
+        return (train_step, (state, batch),
+                (SH.to_shardings(mesh, state_spec),
+                 SH.to_shardings(mesh, batch_spec)))
+
+    if shape.kind == "prefill":
+        if cfg.is_encoder_only:
+            fn = lambda p, x: M.forward(cfg, p, x, opts)[0]
+        else:
+            fn = lambda p, x: M.prefill(cfg, p, x, buf_len=shape.seq_len,
+                                        opts=opts)
+        x_spec = SH.batch_spec(mesh, shape.global_batch, ins["inputs"].ndim)
+        return (fn, (params, ins["inputs"]),
+                (p_shard, SH.to_shardings(mesh, x_spec)))
+
+    if shape.kind == "decode":
+        fn = lambda p, c, t: M.decode_step(cfg, p, c, t, opts=opts)
+        c_spec = SH.cache_specs(cfg, mesh, shape.global_batch,
+                                buf_len=SP.decode_buf_len(cfg, shape))
+        t_spec = SH.batch_spec(mesh, shape.global_batch, 1)
+        return (fn, (params, ins["cache"], ins["tokens"]),
+                (p_shard, SH.to_shardings(mesh, c_spec),
+                 SH.to_shardings(mesh, t_spec)))
+    raise ValueError(shape.kind)
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             opts: Optional[M.ModelOptions] = None) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_kind, "status": "ok"}
+    if shape.kind == "decode" and cfg.is_encoder_only:
+        rec["status"] = "skip"
+        rec["reason"] = "encoder-only: no decode step (DESIGN.md §4)"
+        return rec
+    multi = mesh_kind == "multipod"
+    mesh = make_production_mesh(multi_pod=multi)
+    rec["mesh_shape"] = dict(zip(mesh.axis_names,
+                                 [int(mesh.shape[a]) for a in mesh.axis_names]))
+    fn, args, in_shardings = build_cell(cfg, shape, mesh, opts)
+    t0 = time.time()
+    with mesh, activation_partitioning(batch_axes(mesh), "model"):
+        lowered = jax.jit(fn, in_shardings=in_shardings).lower(*args)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+        mem = compiled.memory_analysis()
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes",
+                     "alias_size_in_bytes"):
+            rec[attr] = int(getattr(mem, attr, 0) or 0)
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        rec["flops_per_device"] = float(cost.get("flops", 0.0))
+        rec["bytes_per_device"] = float(cost.get("bytes accessed", 0.0))
+        rec["transcendentals"] = float(cost.get("transcendentals", 0.0))
+        hlo = compiled.as_text()
+        rec["collectives"] = collective_bytes(hlo)
+        rec["hlo_bytes"] = len(hlo)
+    if mesh_kind == "pod":   # roofline table is single-pod only
+        rec.update(cost_extrapolate(cfg, shape, mesh))
+    return rec
+
+
+def cost_extrapolate(cfg: ArchConfig, shape: InputShape, mesh) -> Dict[str, Any]:
+    """Loop-free cost model: XLA's cost_analysis counts while-loop (scan)
+    bodies ONCE, so the full-depth scan lowering under-reports FLOPs/bytes by
+    ~n_layers. Lower 1- and 2-layer UNROLLED variants with loop-free (dense)
+    attention — identical math, no while ops — and extrapolate:
+        total = f(1) + (n_layers - 1) * (f(2) - f(1)).
+    """
+    import dataclasses as dc
+    opts = M.ModelOptions(remat=(shape.kind == "train"), attn_impl="dense",
+                          unroll=True)
+    vals = {}
+    for k in (1, 2):
+        cfg_k = dc.replace(cfg, n_layers=k)
+        fn, args, in_sh = build_cell(cfg_k, shape, mesh, opts)
+        with mesh, activation_partitioning(batch_axes(mesh), "model"):
+            compiled = jax.jit(fn, in_shardings=in_sh).lower(*args).compile()
+            cost = compiled.cost_analysis()
+            if isinstance(cost, (list, tuple)):
+                cost = cost[0]
+            coll = collective_bytes(compiled.as_text())
+        vals[k] = (float(cost.get("flops", 0.0)),
+                   float(cost.get("bytes accessed", 0.0)),
+                   float(coll["total"]))
+    L = cfg.n_layers
+    f1, b1, c1 = vals[1]
+    f2, b2, c2 = vals[2]
+    return {
+        "flops_per_device_extrap": f1 + (L - 1) * (f2 - f1),
+        "bytes_per_device_extrap": b1 + (L - 1) * (b2 - b1),
+        "collective_bytes_extrap": c1 + (L - 1) * (c2 - c1),
+        "flops_per_layer": f2 - f1,
+        "flops_nonlayer": 2 * f1 - f2,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = list(ASSIGNED_ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = [s.name for s in SHAPES] if (args.all or not args.shape) else [args.shape]
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+
+    for arch in archs:
+        for shape in shapes:
+            for mk in meshes:
+                path = os.path.join(args.out, f"{arch}__{shape}__{mk}.json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[skip existing] {path}")
+                    continue
+                try:
+                    rec = run_cell(arch, shape, mk)
+                except Exception as e:  # noqa: BLE001 — record the failure
+                    rec = {"arch": arch, "shape": shape, "mesh": mk,
+                           "status": "error", "error": f"{type(e).__name__}: {e}",
+                           "trace": traceback.format_exc()[-2000:]}
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                flop = rec.get("flops_per_device")
+                print(f"[{rec['status']}] {arch} x {shape} x {mk}"
+                      + (f" flops/dev={flop:.3g}"
+                         f" coll={rec['collectives']['total']:.3g}B"
+                         f" compile={rec['compile_s']}s"
+                         if rec["status"] == "ok" else
+                         f" {rec.get('reason', rec.get('error', ''))}"),
+                      flush=True)
+
+
+if __name__ == "__main__":
+    main()

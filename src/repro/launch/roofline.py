@@ -1,0 +1,148 @@
+"""Roofline analysis from the dry-run artifacts (single-pod mesh).
+
+Per (arch x shape):
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = collective_bytes_per_device / link_bw
+(the per-device module is 1/256 of the global program, so dividing the
+per-device quantity by per-chip capability == global / (chips x capability)).
+
+FLOPs/bytes use the loop-free extrapolated values (see dryrun.cost_extrapolate
+— XLA counts scan bodies once); the raw scan-lowering numbers are kept for
+reference.
+
+Usage: PYTHONPATH=src python -m repro.launch.roofline [--dir results/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Any, Dict, List, Optional
+
+from repro.configs import get_config, get_shape
+
+PEAK_FLOPS = 197e12       # bf16 / chip (TPU v5e)
+HBM_BW = 819e9            # B/s / chip
+LINK_BW = 50e9            # B/s / link (ICI)
+CHIPS = 256               # single pod
+
+
+def model_flops_global(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    n = cfg.n_active_params()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch          # decode: one token per slot
+
+
+def _suggest(dom: str, shape_kind: str, ratio: float) -> str:
+    if dom == "collective":
+        return ("reshard to remove cross-device contractions (all-gathers) — "
+                "e.g. align the contraction dim with the 'model' axis or "
+                "overlap collectives with compute")
+    if dom == "memory":
+        if shape_kind == "decode":
+            return ("decode is weight/KV-streaming bound: grow the decode "
+                    "batch (SLICE mask columns), quantize KV, or shard "
+                    "weights further so each chip streams less")
+        return "fuse producer-consumer chains / cast activations to bf16"
+    if ratio < 0.5:
+        return ("compute-bound but <50% useful FLOPs: cut remat recompute "
+                "or redundant (padded/replicated) compute")
+    return "near compute roofline — only algorithmic savings remain"
+
+
+def analyze_record(rec: Dict[str, Any]) -> Optional[Dict[str, Any]]:
+    if rec.get("status") != "ok":
+        return None
+    arch, shape_name = rec["arch"], rec["shape"]
+    flops = rec.get("flops_per_device_extrap", rec.get("flops_per_device", 0.0))
+    byts = rec.get("bytes_per_device_extrap", rec.get("bytes_per_device", 0.0))
+    coll = rec.get("collective_bytes_extrap",
+                   rec.get("collectives", {}).get("total", 0.0))
+    flops = max(flops, rec.get("flops_per_device", 0.0))
+    byts = max(byts, rec.get("bytes_per_device", 0.0))
+    coll = max(coll, float(rec.get("collectives", {}).get("total", 0.0)))
+    t_comp = flops / PEAK_FLOPS
+    t_mem = byts / HBM_BW
+    t_coll = coll / LINK_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dom = max(terms, key=terms.get)
+    mf = model_flops_global(arch, shape_name)
+    hlo_global = flops * CHIPS
+    ratio = mf / hlo_global if hlo_global else 0.0
+    shape = get_shape(shape_name)
+    return {
+        "arch": arch, "shape": shape_name,
+        "compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll,
+        "dominant": dom,
+        "model_flops_global": mf,
+        "hlo_flops_global": hlo_global,
+        "useful_ratio": ratio,
+        "temp_bytes_per_device": rec.get("temp_size_in_bytes", 0),
+        "arg_bytes_per_device": rec.get("argument_size_in_bytes", 0),
+        "suggestion": _suggest(dom, shape.kind, ratio),
+    }
+
+
+def load_all(dirname: str, mesh: str = "pod") -> List[Dict[str, Any]]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dirname, f"*__{mesh}.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        row = analyze_record(rec)
+        if row:
+            rows.append(row)
+        elif rec.get("status") == "skip":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "skip": rec["reason"]})
+    return rows
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x * 1e6:.1f}us"
+
+
+def to_markdown(rows: List[Dict[str, Any]]) -> str:
+    out = ["| arch | shape | compute | memory | collective | dominant | "
+           "useful FLOPs | next lever |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if "skip" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | skipped |"
+                       f" — | {r['skip']} |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r['compute_s'])} | "
+            f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+            f"**{r['dominant']}** | {r['useful_ratio'] * 100:.0f}% | "
+            f"{r['suggestion']} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--out", default="results/roofline")
+    args = ap.parse_args()
+    rows = load_all(args.dir)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out + ".json", "w") as f:
+        json.dump(rows, f, indent=1)
+    md = to_markdown(rows)
+    with open(args.out + ".md", "w") as f:
+        f.write(md + "\n")
+    print(md)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""ShapeDtypeStruct stand-ins for every (arch x input-shape) dry-run cell:
+weak-type-correct, shardable, zero allocation."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.models import model as M
+
+PARAM_DTYPE = jnp.bfloat16
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def param_specs_struct(cfg: ArchConfig, dtype=PARAM_DTYPE):
+    return jax.eval_shape(
+        lambda: M.init_params(cfg, jax.random.PRNGKey(0), dtype))
+
+
+def decode_buf_len(cfg: ArchConfig, shape: InputShape) -> int:
+    """KV buffer for decode shapes: ring of window size when sub-quadratic
+    attention is required; else the full context."""
+    if not cfg.has_attention:
+        return 0
+    if shape.sub_quadratic_required:
+        assert cfg.sliding_window, (
+            f"{cfg.name} has no sub-quadratic attention variant; "
+            f"{shape.name} must be skipped (DESIGN.md §4)")
+        return cfg.sliding_window
+    return shape.seq_len
+
+
+def cache_struct(cfg: ArchConfig, shape: InputShape, dtype=PARAM_DTYPE):
+    buf = decode_buf_len(cfg, shape)
+    return jax.eval_shape(
+        lambda: M.init_cache(cfg, shape.global_batch, max(buf, 1), dtype))
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape,
+                dtype=PARAM_DTYPE) -> Dict[str, Any]:
+    """Model inputs for the step function of this shape's kind."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        if cfg.embedding_inputs:
+            inputs = _sds((B, S, cfg.d_model), dtype)
+        else:
+            inputs = _sds((B, S), jnp.int32)
+        return {"inputs": inputs, "labels": _sds((B, S), jnp.int32)}
+    if shape.kind == "prefill":
+        if cfg.embedding_inputs:
+            return {"inputs": _sds((B, S, cfg.d_model), dtype)}
+        return {"inputs": _sds((B, S), jnp.int32)}
+    if shape.kind == "decode":
+        assert not cfg.is_encoder_only, "encoder-only archs have no decode"
+        return {
+            "cache": cache_struct(cfg, shape, dtype),
+            "tokens": _sds((B,), jnp.int32),
+        }
+    raise ValueError(shape.kind)

@@ -1,0 +1,59 @@
+"""Training launcher (CLI wrapper over training.trainer).
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --steps 50 \
+      [--reduced]
+
+On a TPU mesh the same train_step lowers over the production mesh with the
+FSDP x TP shardings proven by dryrun.py.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.models.model import ModelOptions
+    from repro.training.trainer import make_train_step
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    print(f"{cfg.name}: ~{cfg.n_params() / 1e6:.1f}M params")
+    init_state, train_step = make_train_step(cfg, ModelOptions(),
+                                             peak_lr=args.lr, warmup=10,
+                                             total=args.steps)
+    state = init_state(jax.random.PRNGKey(0))
+    step_fn = jax.jit(train_step)
+    key = jax.random.PRNGKey(1)
+    import jax.numpy as jnp
+    t0 = time.time()
+    for i in range(args.steps):
+        key, k = jax.random.split(key)
+        toks = jax.random.randint(k, (args.batch, args.seq), 0,
+                                  cfg.vocab_size)
+        if cfg.embedding_inputs:
+            inputs = jax.random.normal(k, (args.batch, args.seq,
+                                           cfg.d_model)) * 0.02
+        else:
+            inputs = toks
+        state, m = step_fn(state, {"inputs": inputs, "labels": toks})
+        if i % 10 == 0 or i == args.steps - 1:
+            print(f"step {i:4d} loss={float(m['loss']):.4f} "
+                  f"({time.time() - t0:.1f}s)")
+
+
+if __name__ == "__main__":
+    main()

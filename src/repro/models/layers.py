@@ -1,0 +1,174 @@
+"""Core transformer layers: RMSNorm, RoPE, GQA attention (full / banded /
+chunked-flash / decode-with-cache), gated MLP.
+
+All functions are pure jnp and lower under pjit/GSPMD on any backend; the
+Pallas kernels in ``repro.kernels`` are drop-in replacements for the hot
+paths (see ``repro.kernels.ops``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+# ---------------------------------------------------------------- RoPE
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [..., S, H, hd]; positions: broadcastable to [..., S]."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs   # [..., S, hd/2]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]  # [..., S, 1, hd/2]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- masks
+
+def band_mask(q_pos: jnp.ndarray, k_pos: jnp.ndarray, causal: bool,
+              window: Optional[int]) -> jnp.ndarray:
+    """[..., Sq, Sk] boolean keep-mask from absolute positions."""
+    d = q_pos[..., :, None] - k_pos[..., None, :]
+    m = jnp.ones(d.shape, dtype=bool)
+    if causal:
+        m &= d >= 0
+    if window is not None:
+        m &= d < window
+    return m
+
+
+# ---------------------------------------------------------------- attention
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+              mask: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Plain softmax attention. q: [B,Sq,Hq,hd], k/v: [B,Sk,Hkv,hd].
+
+    GQA: Hq must be a multiple of Hkv. mask: None, [Sq,Sk] or [B,Sq,Sk]
+    (True = keep). Softmax in fp32.
+    """
+    B, Sq, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    g = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, g, hd)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32)
+    scores *= hd ** -0.5
+    if mask is not None:
+        if mask.ndim == 2:
+            mask = mask[None]
+        scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v)
+    return out.reshape(B, Sq, Hq, hd)
+
+
+def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                      q_pos: jnp.ndarray, k_pos: jnp.ndarray,
+                      causal: bool = True, window: Optional[int] = None,
+                      q_chunk: int = 512, k_chunk: int = 1024) -> jnp.ndarray:
+    """Flash-style attention in pure jnp: O(chunk) memory via online softmax.
+
+    This is the XLA-portable long-sequence path (the Pallas flash_prefill
+    kernel implements the same contraction for TPU). Shapes as ``attention``;
+    q_pos/k_pos: [Sq]/[Sk] absolute positions for the band mask.
+    """
+    B, Sq, Hq, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    nq = -(-Sq // q_chunk)
+    nk = -(-Sk // k_chunk)
+    pq = nq * q_chunk - Sq
+    pk = nk * k_chunk - Sk
+    qf = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    kf = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    vf = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    qpf = jnp.pad(q_pos, (0, pq), constant_values=-(10 ** 9))
+    kpf = jnp.pad(k_pos, (0, pk), constant_values=10 ** 9)
+    qf = qf.reshape(B, nq, q_chunk, Hkv, g, hd)
+    kf = kf.reshape(B, nk, k_chunk, Hkv, hd)
+    vf = vf.reshape(B, nk, k_chunk, Hkv, hd)
+    qpf = qpf.reshape(nq, q_chunk)
+    kpf = kpf.reshape(nk, k_chunk)
+    scale = hd ** -0.5
+
+    def q_step(_, qi):
+        qc, qp = qi  # [B,qc,Hkv,g,hd], [qc]
+
+        def k_step(carry, ki):
+            m, l, acc = carry
+            kc, vc, kp = ki
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qc, kc).astype(jnp.float32) * scale
+            keep = band_mask(qp, kp, causal, window)  # [qc,kc]
+            s = jnp.where(keep[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(vc.dtype), vc).astype(jnp.float32)
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, Hkv, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, g, q_chunk, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            k_step, (m0, l0, a0),
+            (kf.swapaxes(0, 1), vf.swapaxes(0, 1), kpf))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)  # [B,Hkv,g,qc,hd]
+
+    _, outs = jax.lax.scan(q_step, None, (qf.swapaxes(0, 1), qpf))
+    # outs: [nq, B, Hkv, g, qc, hd] -> [B, Sq, Hq, hd]
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, nq * q_chunk, Hq, hd)
+    return out[:, :Sq]
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                     kv_pos: jnp.ndarray, q_pos: jnp.ndarray,
+                     window: Optional[int] = None) -> jnp.ndarray:
+    """Single-token decode over a (possibly ring-buffer) KV cache.
+
+    q: [B,Hq,hd] (new token, already RoPE'd); k/v_cache: [B,Hkv,Sbuf,hd]
+    (RoPE'd at absolute positions at write time); kv_pos: [B,Sbuf] absolute
+    position per slot, -1 = empty; q_pos: [B].
+    """
+    B, Hq, hd = q.shape
+    Hkv, Sbuf = k_cache.shape[1], k_cache.shape[2]
+    g = Hq // Hkv
+    qg = q.reshape(B, Hkv, g, hd)
+    s = jnp.einsum("bhgd,bhsd->bhgs", qg, k_cache).astype(jnp.float32)
+    s *= hd ** -0.5
+    keep = kv_pos >= 0
+    keep &= kv_pos <= q_pos[:, None]
+    if window is not None:
+        keep &= q_pos[:, None] - kv_pos < window
+    s = jnp.where(keep[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bhgs,bhsd->bhgd", p, v_cache)
+    return out.reshape(B, Hq, hd)
+
+
+# ---------------------------------------------------------------- MLP
+
+def gated_mlp(x: jnp.ndarray, wg: jnp.ndarray, wu: jnp.ndarray,
+              wd: jnp.ndarray) -> jnp.ndarray:
+    from repro.models.partitioning import shard
+    h = jax.nn.silu(x @ wg) * (x @ wu)
+    h = shard(h, ("b",) + (None,) * (h.ndim - 2) + ("m",))
+    return h @ wd

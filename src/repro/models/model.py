@@ -1,0 +1,372 @@
+"""Unified configurable decoder/encoder: dense GQA, MoE, Mamba2-SSD, hybrid
+(parallel attention+SSM), encoder-only — selected by ``ArchConfig``.
+
+Layers are stacked [L, ...] and driven by ``jax.lax.scan`` so HLO size and
+compile time are O(1) in depth (essential for the 48-layer dry-runs).
+
+Three entry points per architecture:
+  forward(params, inputs)                 -> logits        (train / encode)
+  prefill(params, inputs, cache_len)      -> (last_logits, cache)
+  decode_step(params, cache, tokens, act) -> (logits, cache)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models.partitioning import shard
+
+Params = Dict[str, Any]
+Cache = Dict[str, Any]
+
+
+# ------------------------------------------------------------------ init
+
+def init_params(cfg: ArchConfig, key: jax.Array, dtype=jnp.float32) -> Params:
+    ks = iter(jax.random.split(key, 24))
+    D, Lh = cfg.d_model, cfg.n_layers
+    s = D ** -0.5
+    p: Params = {
+        "embed": (jax.random.normal(next(ks), (cfg.padded_vocab, D)) * s).astype(dtype),
+        "final_norm": jnp.zeros((D,), dtype),
+    }
+    if not cfg.tied_embeddings:
+        p["lm_head"] = (jax.random.normal(next(ks), (D, cfg.padded_vocab)) * s).astype(dtype)
+    blk: Params = {"ln1": jnp.zeros((Lh, D), dtype)}
+    if cfg.has_attention:
+        blk["wq"] = (jax.random.normal(next(ks), (Lh, D, cfg.q_dim)) * s).astype(dtype)
+        blk["wk"] = (jax.random.normal(next(ks), (Lh, D, cfg.kv_dim)) * s).astype(dtype)
+        blk["wv"] = (jax.random.normal(next(ks), (Lh, D, cfg.kv_dim)) * s).astype(dtype)
+        blk["wo"] = (jax.random.normal(next(ks), (Lh, cfg.q_dim, D)) * cfg.q_dim ** -0.5).astype(dtype)
+    if cfg.has_ssm:
+        sub = jax.random.split(next(ks), Lh)
+        blk["ssm"] = jax.vmap(
+            lambda k: SSM.init_ssm_params(k, D, cfg.ssm_inner, cfg.ssm_state,
+                                          cfg.ssm_head_dim, cfg.ssm_conv, dtype)
+        )(sub)
+    if cfg.block_kind == "moe":
+        sub = jax.random.split(next(ks), Lh)
+        blk["moe"] = jax.vmap(
+            lambda k: MOE.init_moe_params(k, D, cfg.d_ff, cfg.n_experts, dtype)
+        )(sub)
+        blk["ln2"] = jnp.zeros((Lh, D), dtype)
+    elif cfg.d_ff > 0:
+        f = cfg.d_ff
+        blk["wg"] = (jax.random.normal(next(ks), (Lh, D, f)) * s).astype(dtype)
+        blk["wu"] = (jax.random.normal(next(ks), (Lh, D, f)) * s).astype(dtype)
+        blk["wd"] = (jax.random.normal(next(ks), (Lh, f, D)) * f ** -0.5).astype(dtype)
+        blk["ln2"] = jnp.zeros((Lh, D), dtype)
+    p["blocks"] = blk
+    return p
+
+
+def init_cache(cfg: ArchConfig, batch: int, buf_len: int,
+               dtype=jnp.float32) -> Cache:
+    """Empty decode cache. buf_len: KV slots (ring size if sliding window)."""
+    c: Cache = {"length": jnp.zeros((batch,), jnp.int32)}
+    if cfg.has_attention:
+        c["k"] = jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads, buf_len,
+                            cfg.head_dim), dtype)
+        c["v"] = jnp.zeros_like(c["k"])
+        c["kv_pos"] = jnp.full((batch, buf_len), -1, jnp.int32)
+    if cfg.has_ssm:
+        c["ssm"] = jnp.zeros((cfg.n_layers, batch, cfg.ssm_heads,
+                              cfg.ssm_head_dim, cfg.ssm_state), jnp.float32)
+        c["conv"] = jnp.zeros((cfg.n_layers, batch,
+                               cfg.ssm_inner + 2 * cfg.ssm_state,
+                               cfg.ssm_conv - 1), dtype)
+    return c
+
+
+# ------------------------------------------------------------------ blocks
+
+def _attn_seq(cfg: ArchConfig, bp: Params, h: jnp.ndarray,
+              positions: jnp.ndarray, attn_impl: str,
+              window: Optional[int]) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Full-sequence attention. h: [B,S,D] (already normed). Returns
+    (out [B,S,D], kv dict for cache building)."""
+    B, S, D = h.shape
+    q = (h @ bp["wq"]).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = (h @ bp["wk"]).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    v = (h @ bp["wv"]).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    q = shard(L.apply_rope(q, positions, cfg.rope_theta), ("b", None, "m", None))
+    k = shard(L.apply_rope(k, positions, cfg.rope_theta), ("b", None, "m", None))
+    v = shard(v, ("b", None, "m", None))
+    if attn_impl == "dense":
+        mask = L.band_mask(positions, positions, cfg.causal, window)
+        out = L.attention(q, k, v, mask)
+    else:
+        out = L.chunked_attention(q, k, v, positions, positions,
+                                  causal=cfg.causal, window=window)
+    out = shard(out, ("b", None, "m", None))
+    return out.reshape(B, S, cfg.q_dim) @ bp["wo"], {"k": k, "v": v}
+
+
+def _ffn(cfg: ArchConfig, bp: Params, x: jnp.ndarray,
+         moe_impl: str) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Post-mixer FFN (residual applied by caller). Returns (out, aux_loss)."""
+    zero = jnp.zeros((), jnp.float32)
+    if cfg.block_kind == "moe":
+        h = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
+        if moe_impl == "grouped" and h.ndim == 3 and h.shape[1] > 1:
+            fn = MOE.moe_ffn_grouped
+        elif moe_impl == "dense":
+            fn = MOE.moe_ffn_dense
+        else:
+            fn = MOE.moe_ffn
+        y, aux = fn(MOE.MoEParams(bp["moe"].router, bp["moe"].wg,
+                                  bp["moe"].wu, bp["moe"].wd), h, cfg.top_k)
+        return y, aux
+    if cfg.d_ff > 0:
+        h = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
+        return L.gated_mlp(h, bp["wg"], bp["wu"], bp["wd"]), zero
+    return jnp.zeros_like(x), zero
+
+
+def _block_seq(cfg: ArchConfig, bp: Params, x: jnp.ndarray,
+               positions: jnp.ndarray, attn_impl: str, window: Optional[int],
+               want_cache: bool, moe_impl: str, use_ssd_kernel: bool = False):
+    """One layer over a full sequence. Returns (x, layer_cache|{}, aux)."""
+    h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
+    cache: Dict[str, Any] = {}
+    parts = []
+    if cfg.has_attention:
+        a_out, kv = _attn_seq(cfg, bp, h, positions, attn_impl, window)
+        parts.append(a_out)
+        if want_cache:
+            cache.update(kv)
+    if cfg.has_ssm:
+        if want_cache:
+            s_out, hS, cS = SSM.ssm_mixer_with_state(
+                SSM.SSMParams(*[bp["ssm"][i] for i in range(len(bp["ssm"]))]),
+                h, cfg.ssm_inner, cfg.ssm_state, cfg.ssm_head_dim,
+                use_kernel=use_ssd_kernel)
+            cache["ssm"], cache["conv"] = hS, cS
+        else:
+            s_out = SSM.ssm_mixer(
+                SSM.SSMParams(*[bp["ssm"][i] for i in range(len(bp["ssm"]))]),
+                h, cfg.ssm_inner, cfg.ssm_state, cfg.ssm_head_dim,
+                use_kernel=use_ssd_kernel)
+        parts.append(s_out)
+    mixer = parts[0] if len(parts) == 1 else 0.5 * (parts[0] + parts[1])
+    x = x + mixer
+    f_out, aux = _ffn(cfg, bp, x, moe_impl)
+    return x + f_out, cache, aux
+
+
+# ------------------------------------------------------------------ forward
+
+@dataclasses.dataclass(frozen=True)
+class ModelOptions:
+    attn_impl: str = "auto"       # auto | dense | chunked
+    moe_impl: str = "grouped"     # grouped | sorted | dense
+    remat: bool = False
+    use_ssd_kernel: bool = False
+    train_window: Optional[int] = None  # cap attention window in training
+    unroll: bool = False  # unroll the layer scan (dry-run cost analysis:
+                          # XLA counts while-loop bodies once, so scan-based
+                          # lowerings under-report FLOPs by ~n_layers)
+
+    def resolve_attn(self, seq_len: int) -> str:
+        if self.attn_impl != "auto":
+            return self.attn_impl
+        return "chunked" if seq_len > 2048 else "dense"
+
+
+def embed_inputs(cfg: ArchConfig, params: Params, inputs: jnp.ndarray) -> jnp.ndarray:
+    """Token ids [B,S] -> embeddings; embedding-input archs pass [B,S,D]."""
+    if inputs.ndim == 3:
+        return inputs
+    return params["embed"][inputs]
+
+
+def unembed(cfg: ArchConfig, params: Params, x: jnp.ndarray,
+            keep_padded: bool = False) -> jnp.ndarray:
+    """Project to (padded) vocab. keep_padded=True returns [., padded_vocab]
+    with pad lanes masked to -inf (loss path: keeps the logits vocab-sharded,
+    no all-reduce); otherwise slices back to vocab_size for the API."""
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tied_embeddings else params["lm_head"]
+    logits = x @ head
+    Vp, V = cfg.padded_vocab, cfg.vocab_size
+    if not keep_padded:
+        return logits[..., :V] if Vp != V else logits
+    if Vp != V:
+        # broadcast-add bias (fuses into the matmul epilogue) — a where()
+        # over the logits materializes extra full-logits f32 copies
+        # (measured +30% on yi-6b's train memory term).
+        bias = jnp.where(jnp.arange(Vp) >= V, -1e30, 0.0).astype(logits.dtype)
+        logits = logits + bias
+    return logits
+
+
+def forward(cfg: ArchConfig, params: Params, inputs: jnp.ndarray,
+            opts: ModelOptions = ModelOptions(),
+            keep_padded: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence forward (training / encoder). Returns (logits, aux)."""
+    x = shard(embed_inputs(cfg, params, inputs), ("b", None, None))
+    B, S, D = x.shape
+    positions = jnp.arange(S)
+    impl = opts.resolve_attn(S)
+    window = opts.train_window or (
+        cfg.sliding_window if (cfg.sliding_window and cfg.sliding_window < S) else None)
+
+    def body(carry, bp):
+        x, aux = carry
+        x, _, a = _block_seq(cfg, bp, x, positions, impl, window, False,
+                             opts.moe_impl, opts.use_ssd_kernel)
+        return (x, aux + a), None
+
+    f = jax.checkpoint(body) if opts.remat else body
+    (x, aux), _ = jax.lax.scan(f, (x, jnp.zeros((), jnp.float32)),
+                               params["blocks"], unroll=opts.unroll)
+    return unembed(cfg, params, x, keep_padded=keep_padded), aux / cfg.n_layers
+
+
+def loss_fn(cfg: ArchConfig, params: Params, inputs: jnp.ndarray,
+            labels: jnp.ndarray, opts: ModelOptions = ModelOptions(),
+            aux_weight: float = 0.01) -> jnp.ndarray:
+    """Next-token (decoder) or per-frame (encoder) cross-entropy."""
+    logits, aux = forward(cfg, params, inputs, opts, keep_padded=True)
+    if cfg.causal:
+        logits = logits[:, :-1]
+        targets = labels[:, 1:]
+    else:
+        targets = labels
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    picked = jnp.take_along_axis(
+        logits.astype(jnp.float32), targets[..., None], axis=-1)[..., 0]
+    valid = (targets >= 0).astype(jnp.float32)
+    ce = jnp.sum((lse - picked) * valid) / jnp.maximum(valid.sum(), 1.0)
+    return ce + aux_weight * aux
+
+
+# ------------------------------------------------------------------ prefill
+
+def prefill(cfg: ArchConfig, params: Params, inputs: jnp.ndarray,
+            buf_len: int, opts: ModelOptions = ModelOptions()
+            ) -> Tuple[jnp.ndarray, Cache]:
+    """Process prompts (all rows full length S). Returns (last_logits, cache).
+
+    buf_len >= S for full-attention archs; for sliding-window long-context,
+    buf_len = window and only the last ``window`` tokens are cached (ring).
+    """
+    assert cfg.causal, "encoder-only archs have no prefill/decode"
+    x = embed_inputs(cfg, params, inputs)
+    B, S, D = x.shape
+    positions = jnp.arange(S)
+    impl = opts.resolve_attn(S)
+    window = cfg.sliding_window if (cfg.sliding_window and buf_len < S) else None
+    if window is not None:
+        assert buf_len == window, (buf_len, window)
+
+    def body(x, bp):
+        x, cache, _ = _block_seq(cfg, bp, x, positions, impl, window, True,
+                                 opts.moe_impl, opts.use_ssd_kernel)
+        return x, cache
+
+    x, caches = jax.lax.scan(body, x, params["blocks"], unroll=opts.unroll)
+    out: Cache = {"length": jnp.full((B,), S, jnp.int32)}
+    if cfg.has_attention:
+        k, v = caches["k"], caches["v"]            # [L,B,S,Hkv,hd]
+        k = k.swapaxes(2, 3)                       # [L,B,Hkv,S,hd]
+        v = v.swapaxes(2, 3)
+        if buf_len >= S:
+            pad = ((0, 0), (0, 0), (0, 0), (0, buf_len - S), (0, 0))
+            out["k"], out["v"] = jnp.pad(k, pad), jnp.pad(v, pad)
+            kv_pos = jnp.where(jnp.arange(buf_len) < S, jnp.arange(buf_len), -1)
+        else:  # ring: keep last buf_len tokens at slot p % buf_len
+            tail_pos = jnp.arange(S - buf_len, S)
+            slots = tail_pos % buf_len
+            kt, vt = k[..., -buf_len:, :], v[..., -buf_len:, :]
+            out["k"] = jnp.zeros_like(kt).at[..., slots, :].set(kt)
+            out["v"] = jnp.zeros_like(vt).at[..., slots, :].set(vt)
+            kv_pos = jnp.zeros((buf_len,), jnp.int32).at[slots].set(tail_pos)
+        out["kv_pos"] = jnp.broadcast_to(kv_pos, (B, buf_len))
+    if cfg.has_ssm:
+        out["ssm"], out["conv"] = caches["ssm"], caches["conv"]
+    return unembed(cfg, params, x[:, -1]), out
+
+
+# ------------------------------------------------------------------ decode
+
+def decode_step(cfg: ArchConfig, params: Params, cache: Cache,
+                tokens: jnp.ndarray, active: Optional[jnp.ndarray] = None,
+                opts: ModelOptions = ModelOptions()
+                ) -> Tuple[jnp.ndarray, Cache]:
+    """One decode iteration for every (active) slot.
+
+    tokens: [B] int32; active: [B] bool (inactive slots keep their state —
+    this is the decode-mask-matrix column from SLICE's rate allocator).
+    Returns (logits [B,V], new cache).
+    """
+    assert cfg.causal
+    B = tokens.shape[0]
+    if active is None:
+        active = jnp.ones((B,), bool)
+    x = params["embed"][tokens]                    # [B,D]
+    length = cache["length"]                       # [B]
+    q_pos = length
+    new_cache: Cache = {"length": jnp.where(active, length + 1, length)}
+    buf_len = cache["k"].shape[3] if cfg.has_attention else 0
+    window = None
+    if cfg.has_attention and cfg.sliding_window and buf_len <= cfg.sliding_window:
+        window = cfg.sliding_window
+    slot = (q_pos % buf_len) if buf_len else q_pos
+    if cfg.has_attention:
+        kv_pos = cache["kv_pos"]
+        new_kv_pos = kv_pos.at[jnp.arange(B), slot].set(
+            jnp.where(active, q_pos, kv_pos[jnp.arange(B), slot]))
+        new_cache["kv_pos"] = new_kv_pos
+
+    def body(x, xs):
+        bp, layer_cache = xs
+        h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
+        new_lc: Dict[str, Any] = {}
+        parts = []
+        if cfg.has_attention:
+            q = (h @ bp["wq"]).reshape(B, cfg.n_heads, cfg.head_dim)
+            k = (h @ bp["wk"]).reshape(B, cfg.n_kv_heads, cfg.head_dim)
+            v = (h @ bp["wv"]).reshape(B, cfg.n_kv_heads, cfg.head_dim)
+            q = shard(L.apply_rope(q[:, None], q_pos[:, None],
+                                   cfg.rope_theta)[:, 0], ("b", "m", None))
+            k = L.apply_rope(k[:, None], q_pos[:, None], cfg.rope_theta)[:, 0]
+            kc, vc = layer_cache["k"], layer_cache["v"]
+            sel = active[:, None, None]
+            kc = kc.at[jnp.arange(B), :, slot].set(
+                jnp.where(sel, k, kc[jnp.arange(B), :, slot]))
+            vc = vc.at[jnp.arange(B), :, slot].set(
+                jnp.where(sel, v, vc[jnp.arange(B), :, slot]))
+            a = L.decode_attention(q, kc, vc, new_kv_pos, q_pos, window)
+            parts.append(a.reshape(B, cfg.q_dim) @ bp["wo"])
+            new_lc["k"], new_lc["v"] = kc, vc
+        if cfg.has_ssm:
+            sp = SSM.SSMParams(*[bp["ssm"][i] for i in range(len(bp["ssm"]))])
+            s_out, hS, cS = SSM.ssm_mixer_step(
+                sp, h, cfg.ssm_inner, cfg.ssm_state, cfg.ssm_head_dim,
+                layer_cache["ssm"], layer_cache["conv"])
+            sel2 = active[:, None, None]
+            hS = jnp.where(active[:, None, None, None], hS, layer_cache["ssm"])
+            cS = jnp.where(sel2, cS, layer_cache["conv"])
+            parts.append(s_out)
+            new_lc["ssm"], new_lc["conv"] = hS, cS
+        mixer = parts[0] if len(parts) == 1 else 0.5 * (parts[0] + parts[1])
+        x = x + mixer
+        f_out, _ = _ffn(cfg, bp, x, "dense" if cfg.block_kind != "moe"
+                        else opts.moe_impl)
+        return x + f_out, new_lc
+
+    layer_caches = {k: cache[k] for k in ("k", "v", "ssm", "conv") if k in cache}
+    x, new_layer_caches = jax.lax.scan(body, x, (params["blocks"], layer_caches),
+                                       unroll=opts.unroll)
+    new_cache.update(new_layer_caches)
+    logits = unembed(cfg, params, x)
+    return logits, new_cache

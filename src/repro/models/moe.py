@@ -1,0 +1,162 @@
+"""Mixture-of-Experts FFN: top-k routing with sort-based capacity dispatch.
+
+TPU-adapted: instead of GShard's [.., E, C] one-hot dispatch tensors (O(T*E*C)
+memory — infeasible at 32k context) we use an argsort-based dispatch that
+builds a dense [E, C, D] expert buffer (O(T*K*D*capacity_factor) memory).
+Under GSPMD this lowers to gathers/scatters + all-to-all when experts are
+sharded over the 'model' axis; the roofline pass inspects exactly that.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import gated_mlp
+from repro.models.partitioning import shard
+
+
+class MoEParams(NamedTuple):
+    router: jnp.ndarray   # [D, E]
+    wg: jnp.ndarray       # [E, D, F]
+    wu: jnp.ndarray       # [E, D, F]
+    wd: jnp.ndarray       # [E, F, D]
+
+
+def init_moe_params(key, d_model: int, d_ff: int, n_experts: int,
+                    dtype=jnp.float32) -> MoEParams:
+    ks = jax.random.split(key, 4)
+    s_in, s_out = d_model ** -0.5, d_ff ** -0.5
+    return MoEParams(
+        router=(jax.random.normal(ks[0], (d_model, n_experts)) * s_in).astype(dtype),
+        wg=(jax.random.normal(ks[1], (n_experts, d_model, d_ff)) * s_in).astype(dtype),
+        wu=(jax.random.normal(ks[2], (n_experts, d_model, d_ff)) * s_in).astype(dtype),
+        wd=(jax.random.normal(ks[3], (n_experts, d_ff, d_model)) * s_out).astype(dtype),
+    )
+
+
+def route(router: jnp.ndarray, x: jnp.ndarray, top_k: int
+          ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x: [N,D] -> (weights [N,K], expert_ids [N,K], aux_loss scalar)."""
+    logits = (x @ router).astype(jnp.float32)          # [N,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, ids = jax.lax.top_k(probs, top_k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance loss
+    E = router.shape[-1]
+    me = probs.mean(0)                                  # mean router prob per expert
+    ce = jnp.zeros((E,), jnp.float32).at[ids.reshape(-1)].add(1.0)
+    ce = ce / jnp.maximum(ce.sum(), 1.0)
+    aux = E * jnp.sum(me * ce)
+    return w.astype(x.dtype), ids, aux
+
+
+def moe_ffn(p: MoEParams, x: jnp.ndarray, top_k: int,
+            capacity_factor: float = 1.25) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B,T,D] or [N,D] -> (y same shape, aux_loss)."""
+    orig_shape = x.shape
+    D = orig_shape[-1]
+    x2 = x.reshape(-1, D)
+    N = x2.shape[0]
+    E = p.router.shape[-1]
+    K = top_k
+    w, ids, aux = route(p.router, x2, K)
+
+    NK = N * K
+    e_flat = ids.reshape(-1)                            # [NK]
+    t_flat = jnp.repeat(jnp.arange(N), K)               # token index per assignment
+    w_flat = w.reshape(-1)
+    order = jnp.argsort(e_flat)                         # stable
+    es, ts, ws = e_flat[order], t_flat[order], w_flat[order]
+    # position of each assignment within its expert segment
+    seg_start = jnp.searchsorted(es, jnp.arange(E))     # [E]
+    pos = jnp.arange(NK) - seg_start[es]
+    C = max(int(NK / E * capacity_factor + 0.999), K)
+    # scatter into expert buffer; overflow (pos >= C) dropped
+    buf = jnp.zeros((E, C, D), x.dtype)
+    buf = shard(buf.at[es, pos].set(x2[ts], mode="drop"), ("m", None, None))
+    h = jnp.einsum("ecd,edf->ecf", buf, p.wg)
+    h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", buf, p.wu)
+    h = shard(h, ("m", None, None))
+    out = shard(jnp.einsum("ecf,efd->ecd", h, p.wd), ("m", None, None))
+    # gather back (dropped assignments contribute 0)
+    y_assign = out.at[es, pos].get(mode="fill", fill_value=0)   # [NK, D]
+    y = jnp.zeros((N, D), x.dtype).at[ts].add(y_assign * ws[:, None])
+    return y.reshape(orig_shape), aux
+
+
+def moe_ffn_grouped(p: MoEParams, x: jnp.ndarray, top_k: int,
+                    capacity_factor: float = 1.25
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Batch-local dispatch: sort/scatter WITHIN each example (GShard-style
+    groups) so the dispatch machinery never crosses the batch sharding.
+
+    The global-argsort dispatch in ``moe_ffn`` is not shardable — under
+    GSPMD it all-gathers the [N*K, D] token stream across the 'data' axis
+    every layer (the dominant collective term of the MoE train/prefill
+    dry-runs, see EXPERIMENTS.md §Perf hypothesis P2). Sorting along the
+    time axis of a [B, T*K] array is batch-parallel: zero dispatch
+    collectives. Capacity becomes per-example (standard GShard semantics).
+    Requires T > 1 (decode keeps the global path — 1 token/slot is cheap).
+    """
+    B, T, D = x.shape
+    E = p.router.shape[-1]
+    K = top_k
+    w, ids, aux = route(p.router, x.reshape(-1, D), K)
+    w = w.reshape(B, T, K)
+    ids = ids.reshape(B, T, K)
+    C = max(int(T * K / E * capacity_factor + 0.999), K)
+
+    def one(xe, we, ide):
+        TK = T * K
+        e_flat = ide.reshape(TK)
+        order = jnp.argsort(e_flat)
+        es = e_flat[order]
+        ts = order // K
+        ws = we.reshape(TK)[order]
+        seg_start = jnp.searchsorted(es, jnp.arange(E))
+        pos = jnp.arange(TK) - seg_start[es]
+        buf = jnp.zeros((E, C, D), xe.dtype).at[es, pos].set(
+            xe[ts], mode="drop")
+        return buf, (es, pos, ts, ws)
+
+    buf, meta = jax.vmap(one)(x, w, ids)                 # [B,E,C,D]
+    buf = shard(buf, ("b", None, None, None))
+    h = jnp.einsum("becd,edf->becf", buf, p.wg)
+    h = jax.nn.silu(h) * jnp.einsum("becd,edf->becf", buf, p.wu)
+    # reshard the expert activations capacity-over-'model' before the
+    # row-parallel wd matmul: replaces the [B,E,C,D] partial-sum all-reduce
+    # with a ~6x smaller all-to-all (EXPERIMENTS.md §Perf hypothesis P3)
+    h = shard(h, ("b", None, "m", None))
+    out = jnp.einsum("becf,efd->becd", h, p.wd)
+    out = shard(out, ("b", None, "m", None))
+
+    def back(oute, m):
+        es, pos, ts, ws = m
+        y_assign = oute.at[es, pos].get(mode="fill", fill_value=0)
+        return jnp.zeros((T, D), oute.dtype).at[ts].add(
+            y_assign * ws[:, None])
+
+    y = jax.vmap(back)(out, meta)
+    return y, aux
+
+
+def moe_ffn_dense(p: MoEParams, x: jnp.ndarray, top_k: int
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Oracle: compute every expert for every token, combine top-k weights.
+
+    O(E/K) more FLOPs — used for tests and tiny decode batches where the
+    dispatch machinery costs more than it saves.
+    """
+    orig_shape = x.shape
+    x2 = x.reshape(-1, orig_shape[-1])
+    w, ids, aux = route(p.router, x2, top_k)
+    h = jnp.einsum("nd,edf->enf", x2, p.wg)
+    h = jax.nn.silu(h) * jnp.einsum("nd,edf->enf", x2, p.wu)
+    all_out = jnp.einsum("enf,efd->end", h, p.wd)        # [E,N,D]
+    E = p.router.shape[-1]
+    onehot = jax.nn.one_hot(ids, E, dtype=x2.dtype)      # [N,K,E]
+    comb = jnp.einsum("nke,nk->en", onehot, w)
+    y = jnp.einsum("end,en->nd", all_out, comb)
+    return y.reshape(orig_shape), aux

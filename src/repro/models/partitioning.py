@@ -1,0 +1,59 @@
+"""Activation-sharding constraints (Megatron-style) for pjit lowering.
+
+The model code stays mesh-agnostic: ``shard(x, dims)`` is a no-op unless a
+partition context is installed (the launcher/dry-run installs one inside
+``with mesh:``). dims is a tuple over x's axes: 'b' -> the batch mesh axes,
+'m' -> the tensor-parallel axis, None -> replicated.
+
+Without these constraints GSPMD's propagation may pick different (sometimes
+replicated) layouts per graph — unstable collective schedules and
+per-device cost analysis (see EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_PART: Optional[Tuple[Tuple[str, ...], str]] = None
+
+
+def set_partition(batch_axes: Sequence[str], model_axis: str) -> None:
+    global _PART
+    _PART = (tuple(batch_axes), model_axis)
+
+
+def clear_partition() -> None:
+    global _PART
+    _PART = None
+
+
+class activation_partitioning:
+    """Context manager: with activation_partitioning(('data',), 'model'): ..."""
+
+    def __init__(self, batch_axes: Sequence[str], model_axis: str):
+        self.args = (tuple(batch_axes), model_axis)
+
+    def __enter__(self):
+        set_partition(*self.args)
+        return self
+
+    def __exit__(self, *exc):
+        clear_partition()
+        return False
+
+
+def shard(x, dims: Sequence[Optional[str]]):
+    if _PART is None:
+        return x
+    batch_axes, model_axis = _PART
+    spec = []
+    for d in dims:
+        if d == "b":
+            spec.append(batch_axes if len(batch_axes) > 1 else batch_axes[0])
+        elif d == "m":
+            spec.append(model_axis)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(x, P(*spec))

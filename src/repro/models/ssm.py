@@ -1,0 +1,214 @@
+"""Mamba2 / SSD (state-space duality) mixer [arXiv:2405.21060].
+
+Layout follows the Mamba2 block: in_proj -> (z, xBC, dt); causal depthwise
+conv over xBC; SSD core (chunked dual form for train/prefill, recurrence for
+decode); gated RMSNorm; out_proj.
+
+Single B/C group (G=1). Heads H = d_inner / head_dim P; state size N.
+
+The chunked SSD here is the pure-jnp reference; ``repro.kernels.ssd_scan``
+is the Pallas TPU kernel for the same contraction.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rms_norm
+from repro.models.partitioning import shard
+
+
+class SSMParams(NamedTuple):
+    in_proj: jnp.ndarray    # [D, 2*di + 2*N + H]
+    conv_w: jnp.ndarray     # [conv_dim, K]  (depthwise, conv_dim = di + 2N)
+    conv_b: jnp.ndarray     # [conv_dim]
+    a_log: jnp.ndarray      # [H]
+    d_skip: jnp.ndarray     # [H]
+    dt_bias: jnp.ndarray    # [H]
+    norm_w: jnp.ndarray     # [di]
+    out_proj: jnp.ndarray   # [di, D]
+
+
+def init_ssm_params(key, d_model: int, d_inner: int, n_state: int,
+                    head_dim: int, conv_k: int, dtype=jnp.float32) -> SSMParams:
+    H = d_inner // head_dim
+    conv_dim = d_inner + 2 * n_state
+    ks = jax.random.split(key, 4)
+    scale = d_model ** -0.5
+    return SSMParams(
+        in_proj=(jax.random.normal(ks[0], (d_model, 2 * d_inner + 2 * n_state + H)) * scale).astype(dtype),
+        conv_w=(jax.random.normal(ks[1], (conv_dim, conv_k)) * conv_k ** -0.5).astype(dtype),
+        conv_b=jnp.zeros((conv_dim,), dtype),
+        a_log=jnp.log(jnp.linspace(1.0, 16.0, H)).astype(dtype),
+        d_skip=jnp.ones((H,), dtype),
+        dt_bias=(jax.random.normal(ks[2], (H,)) * 0.1).astype(dtype),
+        norm_w=jnp.zeros((d_inner,), dtype),
+        out_proj=(jax.random.normal(ks[3], (d_inner, d_model)) * d_inner ** -0.5).astype(dtype),
+    )
+
+
+def _split_proj(p: SSMParams, zxbcdt: jnp.ndarray, d_inner: int, n_state: int):
+    H = p.a_log.shape[0]
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * n_state], axis=-1)
+    return z, xbc, dt  # dt: [..., H]
+
+
+def causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv via K shifted adds. xbc: [B,T,C], w: [C,K]."""
+    K = w.shape[-1]
+    out = xbc * w[:, -1]
+    for i in range(1, K):
+        shifted = jnp.pad(xbc, ((0, 0), (i, 0), (0, 0)))[:, :-i]
+        out = out + shifted * w[:, K - 1 - i]
+    return jax.nn.silu(out + b)
+
+
+def causal_conv_step(x: jnp.ndarray, conv_state: jnp.ndarray, w: jnp.ndarray,
+                     b: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One decode step. x: [B,C]; conv_state: [B,C,K-1] (oldest first)."""
+    window = jnp.concatenate([conv_state, x[:, :, None]], axis=-1)  # [B,C,K]
+    y = jax.nn.silu((window * w).sum(-1) + b)
+    return y, window[:, :, 1:]
+
+
+# ------------------------------------------------------------------ SSD core
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, a_log: jnp.ndarray,
+                b: jnp.ndarray, c: jnp.ndarray, d_skip: jnp.ndarray,
+                dt_bias: jnp.ndarray, chunk: int = 64,
+                h0: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD. x: [B,T,H,P]; dt: [B,T,H]; b,c: [B,T,N]; returns
+    (y [B,T,H,P], final_state [B,H,P,N]).
+
+    Dual form: within a chunk the recurrence is computed as masked
+    (quasi-attention) matmuls; across chunks a scan carries the state.
+    """
+    B, T, H, P = x.shape
+    N = b.shape[-1]
+    pad = (-T) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        # pad dt with -inf so softplus(dt+bias) ~ 0: padded steps neither
+        # decay the state nor contribute to it (keeps h_last exact).
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)), constant_values=-1e9)
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    Tp = T + pad
+    nc = Tp // chunk
+    A = -jnp.exp(a_log.astype(jnp.float32))                    # [H]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + dt_bias)     # [B,Tp,H]
+    xq = x.reshape(B, nc, chunk, H, P)
+    dtq = dt.reshape(B, nc, chunk, H)
+    bq = b.reshape(B, nc, chunk, N).astype(jnp.float32)
+    cq = c.reshape(B, nc, chunk, N).astype(jnp.float32)
+
+    dA = dtq * A                                               # [B,nc,q,H]
+    cum = jnp.cumsum(dA, axis=2)                               # within-chunk cumsum
+    # intra-chunk (dual/quadratic) term
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]        # [B,nc,q,k,H]
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # mask BEFORE exp: masked (q<k) entries have seg>0 and would overflow,
+    # poisoning gradients through the where.
+    seg = jnp.where(mask[None, None, :, :, None], seg, -jnp.inf)
+    L = jnp.exp(seg)
+    cb = jnp.einsum("bnqs,bnks->bnqk", cq, bq)                 # [B,nc,q,k]
+    att = cb[..., None] * L                                    # [B,nc,q,k,H]
+    xdt = xq.astype(jnp.float32) * dtq[..., None]              # [B,nc,k,H,P]
+    y_intra = jnp.einsum("bnqkh,bnkhp->bnqhp", att, xdt)
+    # chunk states: contribution of each chunk to its final state
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)            # [B,nc,q,H]
+    states = jnp.einsum("bnks,bnkh,bnkhp->bnhps", bq, dtq * decay_to_end, xq.astype(jnp.float32))
+    # inter-chunk scan
+    chunk_decay = jnp.exp(jnp.sum(dA, axis=2))                 # [B,nc,H]
+
+    def step(h, inp):
+        s, g = inp                                             # [B,H,P,N], [B,H]
+        h_new = h * g[..., None, None] + s
+        return h_new, h                                        # emit state BEFORE chunk
+
+    h_init = jnp.zeros((B, H, P, N), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    h_last, h_prev = jax.lax.scan(step, h_init,
+                                  (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    h_prev = h_prev.swapaxes(0, 1)                             # [B,nc,H,P,N]
+    # inter-chunk output: state entering the chunk, decayed to each position
+    decay_in = jnp.exp(cum)                                    # [B,nc,q,H]
+    y_inter = jnp.einsum("bnqs,bnqh,bnhps->bnqhp", cq, decay_in, h_prev)
+    y = (y_intra + y_inter).reshape(B, Tp, H, P)
+    y = y + x.astype(jnp.float32).reshape(B, Tp, H, P) * d_skip[None, None, :, None]
+    return y[:, :T].astype(x.dtype), h_last
+
+
+def ssd_step(x: jnp.ndarray, dt: jnp.ndarray, a_log: jnp.ndarray,
+             b: jnp.ndarray, c: jnp.ndarray, d_skip: jnp.ndarray,
+             dt_bias: jnp.ndarray, h: jnp.ndarray
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single-token recurrence. x: [B,H,P]; dt: [B,H]; b,c: [B,N];
+    h: [B,H,P,N] -> (y [B,H,P], h')."""
+    A = -jnp.exp(a_log.astype(jnp.float32))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + dt_bias)     # [B,H]
+    g = jnp.exp(dt * A)                                        # [B,H]
+    xf = x.astype(jnp.float32)
+    h_new = h * g[..., None, None] + jnp.einsum(
+        "bhp,bn,bh->bhpn", xf, b.astype(jnp.float32), dt)
+    y = jnp.einsum("bhpn,bn->bhp", h_new, c.astype(jnp.float32))
+    y = y + xf * d_skip[None, :, None]
+    return y.astype(x.dtype), h_new
+
+
+# ------------------------------------------------------------------ block
+
+def ssm_mixer(p: SSMParams, x: jnp.ndarray, d_inner: int, n_state: int,
+              head_dim: int, chunk: int = 64,
+              use_kernel: bool = False) -> jnp.ndarray:
+    """Full-sequence Mamba2 mixer (train/prefill, no state I/O). x: [B,T,D]."""
+    y, _, _ = ssm_mixer_with_state(p, x, d_inner, n_state, head_dim,
+                                   chunk=chunk, use_kernel=use_kernel)
+    return y
+
+
+def ssm_mixer_with_state(p: SSMParams, x: jnp.ndarray, d_inner: int,
+                         n_state: int, head_dim: int, chunk: int = 64,
+                         use_kernel: bool = False):
+    """Returns (y, final_ssm_state [B,H,P,N], final_conv_state [B,C,K-1])."""
+    B, T, D = x.shape
+    H = d_inner // head_dim
+    K = p.conv_w.shape[-1]
+    zxbcdt = x @ p.in_proj
+    z, xbc, dt = _split_proj(p, zxbcdt, d_inner, n_state)
+    xbc_conv = causal_conv(xbc, p.conv_w, p.conv_b)
+    xs, b, c = jnp.split(xbc_conv, [d_inner, d_inner + n_state], axis=-1)
+    xh = shard(xs.reshape(B, T, H, head_dim), ("b", None, "m", None))
+    if use_kernel:
+        from repro.kernels import ops as kops
+        y, h_last = kops.ssd_scan(xh, dt, p.a_log, b, c, p.d_skip, p.dt_bias,
+                                  chunk=chunk)
+    else:
+        y, h_last = ssd_chunked(xh, dt, p.a_log, b, c, p.d_skip, p.dt_bias,
+                                chunk=chunk)
+    y = y.reshape(B, T, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p.norm_w)
+    # conv state = last K-1 raw xbc inputs
+    pad = max(K - 1 - T, 0)
+    tail = jnp.pad(xbc, ((0, 0), (pad, 0), (0, 0)))[:, -(K - 1):]
+    conv_state = tail.swapaxes(1, 2)                           # [B,C,K-1]
+    return y @ p.out_proj, h_last, conv_state
+
+
+def ssm_mixer_step(p: SSMParams, x: jnp.ndarray, d_inner: int, n_state: int,
+                   head_dim: int, ssm_state: jnp.ndarray,
+                   conv_state: jnp.ndarray):
+    """One decode step. x: [B,D] -> (y [B,D], ssm_state', conv_state')."""
+    B, D = x.shape
+    H = d_inner // head_dim
+    zxbcdt = x @ p.in_proj
+    z, xbc, dt = _split_proj(p, zxbcdt, d_inner, n_state)
+    xbc_c, conv_state = causal_conv_step(xbc, conv_state, p.conv_w, p.conv_b)
+    xs, b, c = jnp.split(xbc_c, [d_inner, d_inner + n_state], axis=-1)
+    y, ssm_state = ssd_step(xs.reshape(B, H, head_dim), dt, p.a_log, b, c,
+                            p.d_skip, p.dt_bias, ssm_state)
+    y = y.reshape(B, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p.norm_w)
+    return y @ p.out_proj, ssm_state, conv_state

@@ -1,0 +1,73 @@
+"""SLO attainment metrics (paper §VI-A): TTFT / TPOT / deadline / overall,
+split by real-time vs non-real-time, plus completion times."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.task import Task
+
+
+def _mean(xs) -> Optional[float]:
+    xs = [x for x in xs if x is not None]
+    return sum(xs) / len(xs) if xs else None
+
+
+@dataclasses.dataclass
+class Attainment:
+    n: int
+    slo: float
+    ttft: float
+    tpot: float
+    deadline: float
+    mean_completion_ms: Optional[float]
+    mean_tpot_ms: Optional[float]
+
+    def row(self) -> Dict[str, float]:
+        return dataclasses.asdict(self)
+
+
+def summarize(tasks: Sequence[Task]) -> Dict[str, Attainment]:
+    """Returns {'all': ..., 'realtime': ..., 'non_realtime': ...}."""
+    out = {}
+    groups = {
+        "all": list(tasks),
+        "realtime": [t for t in tasks if t.slo.realtime],
+        "non_realtime": [t for t in tasks if not t.slo.realtime],
+    }
+    for name, ts in groups.items():
+        n = len(ts)
+        if n == 0:
+            out[name] = Attainment(0, 0.0, 0.0, 0.0, 0.0, None, None)
+            continue
+        slo = sum(t.slo_met() for t in ts) / n
+        ttft = sum(t.ttft_met() for t in ts) / n
+        tpot = sum(t.tpot_met() for t in ts) / n
+        rt = [t for t in ts if t.slo.realtime]
+        ddl = (sum(t.slo_met() for t in rt) / len(rt)) if rt else 1.0
+        out[name] = Attainment(
+            n=n, slo=slo, ttft=ttft, tpot=tpot, deadline=ddl,
+            mean_completion_ms=_mean([t.completion_ms for t in ts]),
+            mean_tpot_ms=_mean([t.tpot_measured_ms for t in ts if t.finished]),
+        )
+    return out
+
+
+def per_kind_tpot(tasks: Sequence[Task]) -> Dict[str, Dict[str, float]]:
+    """Table II style: actual TPOT / rate / attainment per task kind."""
+    kinds: Dict[str, List[Task]] = {}
+    for t in tasks:
+        kinds.setdefault(t.kind, []).append(t)
+    rows = {}
+    for kind, ts in sorted(kinds.items()):
+        fin = [t for t in ts if t.finished]
+        tp = _mean([t.tpot_measured_ms for t in fin])
+        rows[kind] = {
+            "n": len(ts),
+            "tpot_slo_ms": ts[0].slo.tpot_ms,
+            "actual_tpot_ms": tp,
+            "decode_rate_tps": (1000.0 / tp) if tp else None,
+            "tpot_satisfied": all(t.tpot_met() for t in fin) and bool(fin),
+            "slo_attainment": sum(t.slo_met() for t in ts) / len(ts),
+        }
+    return rows

@@ -1,0 +1,38 @@
+"""Flat-npz pytree checkpointing (offline container: no orbax)."""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+_SEP = "|"
+
+
+def _flatten(tree: Any):
+    paths_leaves = jax.tree_util.tree_flatten_with_path(tree)
+    flat = {}
+    for path, leaf in paths_leaves[0]:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat, paths_leaves[1]
+
+
+def save(path: str, tree: Any) -> None:
+    flat, _ = _flatten(tree)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **flat)
+
+
+def restore(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (shape/dtype-checked)."""
+    with np.load(path) as data:
+        flat, treedef = _flatten(like)
+        leaves = []
+        for key, ref in flat.items():
+            arr = data[key]
+            if arr.shape != ref.shape:
+                raise ValueError(f"ckpt mismatch at {key}: {arr.shape} vs {ref.shape}")
+            leaves.append(arr.astype(ref.dtype))
+        return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,73 @@
+"""Minimal pure-JAX AdamW (+ cosine/WSD schedules) — no optax dependency."""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def adamw(lr: Callable[[jnp.ndarray], jnp.ndarray] | float,
+          b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1):
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+
+    def init(params) -> AdamWState:
+        zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        return AdamWState(jnp.zeros((), jnp.int32), zeros,
+                          jax.tree.map(jnp.copy, zeros))
+
+    def update(grads, state: AdamWState, params) -> Tuple[Any, AdamWState]:
+        step = state.step + 1
+        lr_t = lr_fn(step)
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype), m, v
+
+        flat_p, tree = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_m = jax.tree.leaves(state.mu)
+        flat_v = jax.tree.leaves(state.nu)
+        out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = tree.unflatten([o[0] for o in out])
+        new_m = tree.unflatten([o[1] for o in out])
+        new_v = tree.unflatten([o[2] for o in out])
+        return new_p, AdamWState(step, new_m, new_v)
+
+    return init, update
+
+
+def wsd_schedule(peak_lr: float, warmup: int, stable: int, decay: int):
+    """Warmup-Stable-Decay (MiniCPM) schedule."""
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = peak_lr * s / max(warmup, 1)
+        dec = peak_lr * jnp.maximum(
+            0.0, 1.0 - (s - warmup - stable) / max(decay, 1))
+        return jnp.where(s < warmup, warm,
+                         jnp.where(s < warmup + stable, peak_lr, dec))
+    return lr
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    floor: float = 0.1):
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = peak_lr * s / max(warmup, 1)
+        t = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(s < warmup, warm, cos)
+    return lr

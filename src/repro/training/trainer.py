@@ -1,0 +1,39 @@
+"""Training step factory: loss + grad + AdamW update, pjit-shardable."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import model as M
+from repro.training.optimizer import AdamWState, adamw, cosine_schedule
+
+
+def make_train_step(cfg: ArchConfig, opts: Optional[M.ModelOptions] = None,
+                    peak_lr: float = 3e-4, warmup: int = 100,
+                    total: int = 10_000):
+    """Returns (init_state(key, dtype), train_step(state, batch) -> (state, metrics)).
+
+    state = (params, opt_state); batch = {"inputs": ..., "labels": ...}.
+    """
+    opts = opts or M.ModelOptions(remat=True)
+    opt_init, opt_update = adamw(cosine_schedule(peak_lr, warmup, total))
+
+    def init_state(key, dtype=jnp.float32):
+        params = M.init_params(cfg, key, dtype)
+        return params, opt_init(params)
+
+    def train_step(state, batch):
+        params, opt_state = state
+        loss, grads = jax.value_and_grad(
+            lambda p: M.loss_fn(cfg, p, batch["inputs"], batch["labels"], opts)
+        )(params)
+        new_params, new_opt = opt_update(grads, opt_state, params)
+        gnorm = jnp.sqrt(sum(jnp.vdot(g, g).real
+                             for g in jax.tree.leaves(grads)))
+        return (new_params, new_opt), {"loss": loss, "grad_norm": gnorm}
+
+    return init_state, train_step

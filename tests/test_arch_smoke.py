@@ -1,0 +1,54 @@
+"""Per-assigned-architecture smoke tests: instantiate the REDUCED variant of
+the same family (2 layers, d_model<=256, <=4 experts) and run one forward +
+one train step on CPU, asserting output shapes and finiteness. Decoder archs
+additionally run prefill + one decode step.
+
+Full configs are exercised only via the dry-run (ShapeDtypeStruct)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.models import model as M
+from repro.training.trainer import make_train_step
+
+KEY = jax.random.PRNGKey(42)
+
+
+def _inputs(cfg, B, S):
+    if cfg.embedding_inputs:
+        return jax.random.normal(KEY, (B, S, cfg.d_model)) * 0.02
+    return jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_arch_smoke(arch):
+    cfg = get_config(arch).reduced()
+    assert cfg.n_layers == 2 and cfg.d_model <= 512
+    assert cfg.n_experts <= 4
+    B, S = 2, 16
+    inputs = _inputs(cfg, B, S)
+    labels = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+
+    # one train step
+    init_state, train_step = make_train_step(cfg, M.ModelOptions())
+    state = init_state(KEY)
+    state, metrics = jax.jit(train_step)(state, {"inputs": inputs, "labels": labels})
+    assert jnp.isfinite(metrics["loss"]), arch
+    assert jnp.isfinite(metrics["grad_norm"]), arch
+
+    # forward shapes + no NaNs
+    logits, _ = M.forward(cfg, state[0], inputs)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert not jnp.isnan(logits).any(), arch
+
+    if cfg.causal:  # serve path: prefill + one decode step
+        last, cache = M.prefill(cfg, state[0], inputs, buf_len=S + 8)
+        assert last.shape == (B, cfg.vocab_size)
+        tok = jnp.argmax(last, -1).astype(jnp.int32)
+        lg, cache = M.decode_step(cfg, state[0], cache, tok)
+        assert lg.shape == (B, cfg.vocab_size)
+        assert not jnp.isnan(lg).any(), arch
+        assert int(cache["length"][0]) == S + 1
+    else:
+        assert arch == "hubert-xlarge"  # the only encoder-only assignment

@@ -1,0 +1,126 @@
+"""SLICE core unit tests: mask matrix, Eq. 7 period, selection, schedulers."""
+import numpy as np
+import pytest
+
+from repro.core.latency_model import (AnalyticalLatencyModel,
+                                      MeasuredLatencyModel,
+                                      RooflineLatencyModel, paper_fig1_model)
+from repro.core.mask_matrix import (build_mask_matrix, column_batches,
+                                    estimate_period_eq7_ms, estimate_period_ms,
+                                    mask_matrix_period_ms, quantized_rate,
+                                    stagger_columns)
+from repro.core.selection import selection_feasible, task_selection, total_utility
+from repro.core.task import SLOSpec, Task, control_task, qa_task, voice_task
+
+LAT = paper_fig1_model()
+
+
+def test_latency_model_calibration():
+    # Table II anchor: Orca TPOT at batch 9 ~ 128.6 ms
+    assert LAT.decode_ms(9) == pytest.approx(128.6, abs=1.0)
+    assert LAT.decode_ms(1) < 40.0
+    # monotone
+    for b in range(1, 30):
+        assert LAT.decode_ms(b + 1) > LAT.decode_ms(b)
+
+
+def test_paper_fig4_mask_matrix():
+    """The worked example of Fig. 4: rates 6/4/2/1 -> 4x6 matrix."""
+    m = build_mask_matrix([6, 4, 2, 1])
+    assert m.shape == (4, 6)
+    assert m.sum(1).tolist() == [6, 4, 2, 1]
+    expect = np.array([[1, 1, 1, 1, 1, 1],
+                       [1, 1, 1, 1, 0, 0],
+                       [1, 1, 0, 0, 0, 0],
+                       [1, 0, 0, 0, 0, 0]])
+    np.testing.assert_array_equal(m, expect)
+    # column 2 groups task0 and task1 (paper's example)
+    cb = column_batches(m)
+    assert cb[2].tolist() == [0, 1]
+    assert cb[0].tolist() == [0, 1, 2, 3]
+
+
+def test_eq7_equals_column_sum():
+    for rates in ([6, 4, 2, 1], [10, 10, 8, 8, 4], [1], [5, 5, 5]):
+        a = estimate_period_ms(rates, LAT)
+        b = estimate_period_eq7_ms(rates, LAT)
+        assert a == pytest.approx(b, rel=1e-9), rates
+
+
+def test_mask_matrix_period_equals_eq7_when_left_aligned():
+    rates = [8, 5, 3, 3, 1]
+    m = build_mask_matrix(rates)
+    assert mask_matrix_period_ms(m, LAT) == pytest.approx(
+        estimate_period_ms(rates, LAT))
+
+
+def test_stagger_preserves_quota_and_width():
+    rates = [8, 5, 3, 3, 1]
+    m = build_mask_matrix(rates)
+    s = stagger_columns(m)
+    assert s.shape == m.shape
+    np.testing.assert_array_equal(s.sum(1), m.sum(1))  # same tokens/cycle
+    # staggering smooths the max column batch
+    assert s.sum(0).max() <= m.sum(0).max()
+
+
+def test_quantized_rate_ceils():
+    assert quantized_rate(100.0) == 10
+    assert quantized_rate(120.0) == 9   # ceil(8.33) — never under-provision
+    assert quantized_rate(250.0) == 4
+    assert quantized_rate(2000.0) == 1
+
+
+def test_selection_prefers_high_utility_rate():
+    # RT task with huge utility admitted despite high rate demand
+    rt = control_task(utility=50.0)
+    lax = [qa_task(utility=1.0) for _ in range(30)]
+    selected, rest = task_selection([*lax, rt], LAT)
+    assert rt in selected
+    assert selection_feasible(selected, LAT)
+    assert len(selected) + len(rest) == 31
+
+
+def test_selection_respects_capacity():
+    tasks = [qa_task() for _ in range(100)]   # 10 tok/s each
+    selected, rest = task_selection(tasks, LAT)
+    assert 0 < len(selected) < 100
+    assert selection_feasible(selected, LAT)
+    # adding one more of the same kind must break feasibility
+    assert not selection_feasible(selected + [rest[0]], LAT)
+
+
+def test_selection_empty_and_single():
+    assert task_selection([], LAT) == ([], [])
+    t = voice_task()
+    sel, rest = task_selection([t], LAT)
+    assert sel == [t] and rest == []
+
+
+def test_measured_latency_model_interpolates():
+    m = MeasuredLatencyModel([(1, 10.0), (5, 50.0), (9, 130.0)])
+    assert m.decode_ms(1) == 10.0
+    assert m.decode_ms(3) == pytest.approx(30.0)
+    assert m.decode_ms(7) == pytest.approx(90.0)
+    assert m.decode_ms(9) == 130.0
+
+
+def test_roofline_latency_model_regimes():
+    # 1 chip, memory-bound at small b; compute takes over at large b
+    m = RooflineLatencyModel(active_param_bytes=2e9, flops_per_token=4e9,
+                             kv_bytes_per_token=1e6, chips=1,
+                             overhead_ms=0.0)
+    assert m.decode_ms(1) == pytest.approx(m.decode_ms(2), rel=0.05)  # flat
+    assert m.decode_ms(4096) > 2 * m.decode_ms(1)                     # compute regime
+
+
+def test_utility_rate_eq6():
+    t = Task(SLOSpec(tpot_ms=200.0), utility=10.0)
+    assert t.utility_rate == pytest.approx(10.0 * 0.2)
+
+
+def test_realtime_deadline_translation():
+    s = SLOSpec.realtime_deadline(1500.0, output_len=24)
+    assert s.realtime and s.deadline_ms == 1500.0
+    assert s.ttft_ms + s.tpot_ms * 23 == pytest.approx(1500.0)
+    assert s.rate >= 20.0  # paper: >=20 tok/s for RT tasks

@@ -1,0 +1,58 @@
+"""Integration: the multi-pod dry-run machinery end-to-end (subprocess —
+the 512 placeholder devices must be configured before jax init)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_cell(arch, shape, mesh, tmpdir):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    cp = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--mesh", mesh, "--out", str(tmpdir)],
+        env=env, capture_output=True, text=True, timeout=520, cwd=REPO)
+    assert cp.returncode == 0, cp.stderr[-2000:]
+    with open(os.path.join(str(tmpdir), f"{arch}__{shape}__{mesh}.json")) as f:
+        return json.load(f)
+
+
+def test_dryrun_decode_cell_pod(tmp_path):
+    rec = _run_cell("smollm-360m", "decode_32k", "pod", tmp_path)
+    assert rec["status"] == "ok", rec.get("error")
+    assert rec["mesh_shape"] == {"data": 16, "model": 16}
+    assert rec["flops_per_device"] > 0
+    assert rec["flops_per_device_extrap"] >= rec["flops_per_device"]
+    assert rec["collectives"]["total"] >= 0
+    # decode must fit HBM comfortably (16 GB/chip on v5e)
+    assert rec["temp_size_in_bytes"] < 16e9
+
+
+def test_dryrun_multipod_lowers(tmp_path):
+    rec = _run_cell("smollm-360m", "decode_32k", "multipod", tmp_path)
+    assert rec["status"] == "ok", rec.get("error")
+    assert rec["mesh_shape"] == {"pod": 2, "data": 16, "model": 16}
+
+
+def test_dryrun_encoder_skip(tmp_path):
+    rec = _run_cell("hubert-xlarge", "decode_32k", "pod", tmp_path)
+    assert rec["status"] == "skip"
+    assert "encoder-only" in rec["reason"]
+
+
+def test_roofline_analyzer_on_record():
+    from repro.launch.roofline import analyze_record
+    rec = {"status": "ok", "arch": "yi-6b", "shape": "decode_32k",
+           "flops_per_device": 1e10, "bytes_per_device": 5e10,
+           "flops_per_device_extrap": 4.7e10,
+           "bytes_per_device_extrap": 2.4e11,
+           "collective_bytes_extrap": 1e8,
+           "collectives": {"total": 2e6}, "temp_size_in_bytes": 1}
+    row = analyze_record(rec)
+    assert row["dominant"] == "memory"   # decode is HBM-bound
+    assert row["memory_s"] > row["compute_s"]
+    assert 0 < row["useful_ratio"] < 5

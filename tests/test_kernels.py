@@ -1,0 +1,147 @@
+"""Pallas kernel validation (interpret=True on CPU): shape/dtype sweeps,
+assert_allclose against the pure-jnp oracles in repro.kernels.ref."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _mk_decode(B, Hq, Hkv, S, hd, dtype, filled=None, ring=False):
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (B, Hq, hd), dtype)
+    k = jax.random.normal(ks[1], (B, Hkv, S, hd), dtype)
+    v = jax.random.normal(ks[2], (B, Hkv, S, hd), dtype)
+    filled = S if filled is None else filled
+    if ring:
+        # ring buffer: slot s holds absolute position q_pos - ((q_pos - s) % S)
+        q_pos = jnp.full((B,), filled, jnp.int32)
+        kv_pos = (jnp.arange(S)[None, :]
+                  + (filled - S) // S * S).astype(jnp.int32)
+        kv_pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S)).astype(jnp.int32)
+    else:
+        kv_pos = jnp.where(jnp.arange(S) < filled, jnp.arange(S), -1)
+        kv_pos = jnp.broadcast_to(kv_pos, (B, S)).astype(jnp.int32)
+        q_pos = jnp.full((B,), filled, jnp.int32)
+    return q, k, v, kv_pos, q_pos
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,S,hd", [
+    (2, 4, 2, 128, 32),
+    (1, 8, 1, 256, 64),
+    (3, 6, 6, 64, 16),     # MHA
+    (2, 5, 1, 96, 32),     # odd group, S not multiple of blk -> pad path
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_matches_ref(B, Hq, Hkv, S, hd, dtype):
+    q, k, v, kv_pos, q_pos = _mk_decode(B, Hq, Hkv, S, hd, dtype, filled=S - 7)
+    out = ops.decode_attention(q, k, v, kv_pos, q_pos, blk=64, interpret=True)
+    want = ref.decode_attention_ref(q, k, v, kv_pos, q_pos)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_decode_attention_window():
+    q, k, v, kv_pos, q_pos = _mk_decode(2, 4, 2, 128, 32, jnp.float32)
+    out = ops.decode_attention(q, k, v, kv_pos, q_pos, window=40, blk=32,
+                               interpret=True)
+    want = ref.decode_attention_ref(q, k, v, kv_pos, q_pos, window=40)
+    np.testing.assert_allclose(out, want, rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_empty_slots():
+    """Ring cache with invalid (-1) slots — fully masked blocks must not
+    contribute (the exp(-inf - -inf) guard)."""
+    q, k, v, kv_pos, q_pos = _mk_decode(2, 4, 2, 128, 32, jnp.float32,
+                                        filled=16)
+    out = ops.decode_attention(q, k, v, kv_pos, q_pos, blk=32, interpret=True)
+    want = ref.decode_attention_ref(q, k, v, kv_pos, q_pos)
+    np.testing.assert_allclose(out, want, rtol=2e-5, atol=2e-5)
+    assert not np.isnan(np.asarray(out)).any()
+
+
+@pytest.mark.parametrize("B,S,Hq,Hkv,hd", [
+    (2, 128, 4, 2, 32),
+    (1, 256, 2, 1, 64),
+    (2, 64, 3, 3, 16),
+])
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 48),
+                                           (False, None)])
+def test_flash_prefill_matches_ref(B, S, Hq, Hkv, hd, causal, window):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, hd))
+    k = jax.random.normal(ks[1], (B, S, Hkv, hd))
+    v = jax.random.normal(ks[2], (B, S, Hkv, hd))
+    out = ops.flash_prefill(q, k, v, causal=causal, window=window,
+                            qblk=32, kblk=32, interpret=True)
+    want = ref.flash_prefill_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(out, want, rtol=3e-5, atol=3e-5)
+
+
+def test_flash_prefill_bf16():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 128, 4, 32), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (1, 128, 2, 32), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (1, 128, 2, 32), jnp.bfloat16)
+    out = ops.flash_prefill(q, k, v, qblk=64, kblk=64, interpret=True)
+    want = ref.flash_prefill_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+@pytest.mark.parametrize("B,T,H,P,N,chunk", [
+    (2, 64, 3, 16, 8, 16),
+    (1, 128, 2, 32, 16, 32),
+    (2, 48, 1, 8, 4, 16),
+    (1, 40, 2, 16, 8, 16),   # T not a chunk multiple -> pad path
+])
+def test_ssd_scan_matches_sequential(B, T, H, P, N, chunk):
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (B, T, H, P))
+    dt = jax.random.normal(ks[1], (B, T, H)) * 0.5
+    b = jax.random.normal(ks[2], (B, T, N))
+    c = jax.random.normal(ks[3], (B, T, N))
+    a_log = jnp.log(jnp.linspace(1.0, 4.0, H))
+    d_skip = jnp.ones((H,))
+    dt_bias = jnp.zeros((H,))
+    y, h = ops.ssd_scan(x, dt, a_log, b, c, d_skip, dt_bias, chunk=chunk,
+                        interpret=True)
+    y_ref, h_ref = ref.ssd_scan_sequential_ref(x, dt, a_log, b, c, d_skip,
+                                               dt_bias)
+    np.testing.assert_allclose(y, y_ref, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(h, h_ref, rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_scan_matches_chunked_jnp():
+    B, T, H, P, N = 2, 96, 2, 16, 8
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (B, T, H, P))
+    dt = jax.random.normal(ks[1], (B, T, H)) * 0.5
+    b = jax.random.normal(ks[2], (B, T, N))
+    c = jax.random.normal(ks[3], (B, T, N))
+    a_log = jnp.zeros((H,))
+    d_skip = jnp.zeros((H,))
+    dt_bias = jnp.zeros((H,))
+    y1, h1 = ops.ssd_scan(x, dt, a_log, b, c, d_skip, dt_bias, chunk=32,
+                          interpret=True)
+    y2, h2 = ref.ssd_scan_ref(x, dt, a_log, b, c, d_skip, dt_bias, chunk=32)
+    np.testing.assert_allclose(y1, y2, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(h1, h2, rtol=2e-4, atol=2e-4)
+
+
+def test_model_with_ssd_kernel_matches_jnp_path():
+    """ModelOptions(use_ssd_kernel=True) must reproduce the jnp forward."""
+    from repro.configs import get_config
+    from repro.models import model as M
+    cfg = get_config("mamba2-780m").reduced()
+    p = M.init_params(cfg, KEY)
+    toks = jax.random.randint(KEY, (2, 24), 0, cfg.vocab_size)
+    ref_logits, _ = M.forward(cfg, p, toks)
+    k_logits, _ = M.forward(cfg, p, toks, M.ModelOptions(use_ssd_kernel=True))
+    np.testing.assert_allclose(k_logits, ref_logits, rtol=2e-3, atol=2e-3)

@@ -1,0 +1,123 @@
+"""Property-based tests (hypothesis) for SLICE's invariants."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.latency_model import MeasuredLatencyModel, paper_fig1_model
+from repro.core.mask_matrix import (build_mask_matrix, estimate_period_eq7_ms,
+                                    estimate_period_ms, mask_matrix_period_ms,
+                                    quantized_rate, stagger_columns)
+from repro.core.selection import selection_feasible, task_selection
+from repro.core.task import SLOSpec, Task
+
+LAT = paper_fig1_model()
+
+rates_desc = st.lists(st.integers(1, 40), min_size=1, max_size=24).map(
+    lambda v: sorted(v, reverse=True))
+
+
+@given(rates_desc)
+def test_mask_matrix_row_sums_equal_rates(rates):
+    m = build_mask_matrix(rates)
+    assert m.shape == (len(rates), rates[0])
+    assert m.sum(1).tolist() == list(rates)
+    # left-aligned => column batch sizes are non-increasing
+    cols = m.sum(0).astype(int)
+    assert (np.diff(cols) <= 0).all()
+
+
+@given(rates_desc)
+@settings(deadline=None)
+def test_eq7_identity(rates):
+    """Eq. (7) == column-sum form == exact mask-matrix scan duration."""
+    a = estimate_period_ms(rates, LAT)
+    b = estimate_period_eq7_ms(rates, LAT)
+    c = mask_matrix_period_ms(build_mask_matrix(rates), LAT)
+    assert a == pytest.approx(b, rel=1e-9)
+    assert a == pytest.approx(c, rel=1e-9)
+
+
+@given(rates_desc)
+def test_stagger_preserves_quota_and_period_bound(rates):
+    m = build_mask_matrix(rates)
+    s = stagger_columns(m)
+    assert (s.sum(1) == m.sum(1)).all()
+    assert s.sum(0).max() <= m.sum(0).max()
+
+
+@given(st.floats(10.0, 5000.0))
+def test_quantized_rate_never_underprovisions(tpot_ms):
+    v = quantized_rate(tpot_ms)
+    assert v >= 1000.0 / tpot_ms - 1e-9
+    assert v <= 1000.0 / tpot_ms + 1.0
+
+
+tasks_strategy = st.lists(
+    st.tuples(st.floats(30.0, 2000.0), st.floats(0.1, 100.0)),
+    min_size=0, max_size=40)
+
+
+@given(tasks_strategy)
+@settings(max_examples=60, deadline=None)
+def test_selection_feasible_and_greedy_maximal(specs):
+    tasks = [Task(SLOSpec(tpot_ms=tp), utility=u) for tp, u in specs]
+    sel, rest = task_selection(tasks, LAT)
+    assert len(sel) + len(rest) == len(tasks)
+    assert selection_feasible(sel, LAT)
+    assert set(t.task_id for t in sel).isdisjoint(t.task_id for t in rest)
+    if rest:
+        # greedy stops at the first infeasible add: the highest-utility-rate
+        # remaining task cannot be added
+        nxt = max(rest, key=lambda t: t.utility_rate)
+        assert not selection_feasible(sel + [nxt], LAT)
+
+
+@given(tasks_strategy)
+@settings(max_examples=40, deadline=None)
+def test_jax_selection_matches_reference(specs):
+    """The lax/vectorized Algorithm 2 == the Python reference greedy."""
+    jnp = pytest.importorskip("jax.numpy")
+    from repro.core import jax_impl
+
+    tasks = [Task(SLOSpec(tpot_ms=tp), utility=u) for tp, u in specs]
+    sel_ref, _ = task_selection(tasks, LAT)
+    ref_ids = {t.task_id for t in sel_ref}
+    if not tasks:
+        return
+    lat_table = jnp.asarray([0.0] + [LAT.decode_ms(b) for b in range(1, 128)])
+    utility = jnp.asarray([t.effective_utility for t in tasks])
+    tpot = jnp.asarray([t.slo.tpot_ms for t in tasks])
+    valid = jnp.ones((len(tasks),), bool)
+    selected, _ = jax_impl.select_tasks(utility, tpot, valid, lat_table,
+                                        v_max=64)
+    got_ids = {tasks[i].task_id for i in np.nonzero(np.asarray(selected))[0]}
+    # tie-breaking between equal utility rates may differ; compare totals
+    assert len(got_ids) == len(ref_ids)
+    got_u = sum(t.effective_utility for t in tasks if t.task_id in got_ids)
+    ref_u = sum(t.effective_utility for t in tasks if t.task_id in ref_ids)
+    assert got_u == pytest.approx(ref_u, rel=1e-6)
+
+
+@given(st.lists(st.integers(1, 30), min_size=1, max_size=12),
+       st.integers(0, 10_000))
+def test_measured_latency_monotone_inputs_monotone_outputs(points, off):
+    xs = sorted(set(points))
+    table = [(b, 10.0 + 3.0 * b + off * 0.001) for b in xs]
+    m = MeasuredLatencyModel(table)
+    for b, ms in table:
+        assert m.decode_ms(b) == pytest.approx(ms)
+
+
+@given(st.integers(1, 64), st.integers(1, 64))
+@settings(deadline=None, max_examples=30)
+def test_jax_mask_matrix_matches_numpy(v0, n):
+    jnp = pytest.importorskip("jax.numpy")
+    from repro.core import jax_impl
+    rng = np.random.default_rng(v0 * 131 + n)
+    rates = np.sort(rng.integers(1, v0 + 1, n))[::-1]
+    rates[0] = v0
+    ref = build_mask_matrix(rates.tolist())
+    got = np.asarray(jax_impl.build_mask_matrix(jnp.asarray(rates.copy()), v0))
+    np.testing.assert_array_equal(got, ref)

@@ -1,0 +1,102 @@
+"""Substrate coverage: checkpointing, workload generator, HLO collective
+parser, optimizer schedules, config registry."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config, supported_pairs
+from repro.data.workload import poisson_workload, static_table2_workload
+from repro.launch.hlo_stats import collective_bytes
+from repro.training import checkpoint
+from repro.training.optimizer import adamw, cosine_schedule, wsd_schedule
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "nested": {"b": jnp.ones((4,), jnp.int32)}}
+    path = str(tmp_path / "ck.npz")
+    checkpoint.save(path, tree)
+    got = checkpoint.restore(path, tree)
+    np.testing.assert_array_equal(got["a"], tree["a"])
+    np.testing.assert_array_equal(got["nested"]["b"], tree["nested"]["b"])
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    path = str(tmp_path / "ck.npz")
+    checkpoint.save(path, {"a": jnp.ones((2,))})
+    with pytest.raises(ValueError):
+        checkpoint.restore(path, {"a": jnp.ones((3,))})
+
+
+def test_poisson_workload_statistics():
+    tasks = poisson_workload(rate_per_s=2.0, duration_s=100, seed=0,
+                             realtime_frac=0.7)
+    n = len(tasks)
+    assert 150 < n < 260           # ~200 expected
+    rt = sum(t.slo.realtime for t in tasks)
+    assert 0.6 < rt / n < 0.8
+    times = [t.arrival_ms for t in tasks]
+    assert times == sorted(times)
+    assert all(t.output_len >= 6 for t in tasks)
+
+
+def test_static_workload_matches_table2():
+    tasks = static_table2_workload()
+    by_kind = {}
+    for t in tasks:
+        by_kind.setdefault(t.kind, []).append(t)
+    assert len(by_kind["A"]) == 3 and by_kind["A"][0].slo.tpot_ms == 100.0
+    assert len(by_kind["B"]) == 4 and by_kind["B"][0].slo.tpot_ms == 120.0
+    assert len(by_kind["C"]) == 2 and by_kind["C"][0].slo.tpot_ms == 250.0
+
+
+def test_hlo_collective_parser():
+    hlo = """
+  %ag = bf16[16,4096]{1,0} all-gather(%p0), replica_groups={}
+  %ar.1 = f32[128]{0} all-reduce(%x), to_apply=%add
+  %rs = (f32[64]{0}, f32[32]{0}) reduce-scatter(%a, %b), dimensions={0}
+  %a2a.5 = bf16[8,128]{1,0} all-to-all(%y), dimensions={0}
+  %cp = u32[2]{0} collective-permute(%z), source_target_pairs={{0,1}}
+  %notacoll = f32[9]{0} add(%q, %r)
+"""
+    got = collective_bytes(hlo)
+    assert got["all-gather"] == 16 * 4096 * 2
+    assert got["all-reduce"] == 128 * 4
+    assert got["reduce-scatter"] == 64 * 4 + 32 * 4
+    assert got["all-to-all"] == 8 * 128 * 2
+    assert got["collective-permute"] == 2 * 4
+    assert got["n_all-gather"] == 1
+    assert got["total"] == sum(got[k] for k in
+                               ("all-gather", "all-reduce", "reduce-scatter",
+                                "all-to-all", "collective-permute"))
+
+
+def test_schedules():
+    cos = cosine_schedule(1.0, warmup=10, total=110)
+    assert float(cos(jnp.asarray(0))) == 0.0
+    assert float(cos(jnp.asarray(10))) == pytest.approx(1.0)
+    assert float(cos(jnp.asarray(110))) == pytest.approx(0.1, abs=0.01)
+    wsd = wsd_schedule(1.0, warmup=10, stable=50, decay=40)
+    assert float(wsd(jnp.asarray(30))) == 1.0
+    assert float(wsd(jnp.asarray(100))) == pytest.approx(0.0, abs=0.03)
+
+
+def test_adamw_moves_params_toward_gradient():
+    init, update = adamw(1e-1, weight_decay=0.0)
+    params = {"w": jnp.ones((3,))}
+    state = init(params)
+    grads = {"w": jnp.ones((3,))}
+    new, state = update(grads, state, params)
+    assert (new["w"] < params["w"]).all()
+
+
+def test_registry_pairs_and_skips():
+    cells = supported_pairs()
+    assert len(cells) == 40
+    skips = [(a, s) for a, s, skip in cells if skip]
+    assert skips == [("hubert-xlarge", "decode_32k"),
+                     ("hubert-xlarge", "long_500k")]
+    for a in ASSIGNED_ARCHS:
+        cfg = get_config(a)
+        assert cfg.name == a
