@@ -1,0 +1,142 @@
+"""KV-pressure sweep (EXPERIMENTS.md §KV-paging): SLO attainment and peak
+admitted batch vs KV pool size, slot layout vs paged layout at EQUAL bytes.
+
+A slot array is the degenerate page pool (page_size = max_seq, one page per
+task), so both layouts run through the same SliceScheduler + PageBudget
+admission; only the granularity differs. The sweep holds total KV tokens
+(pool bytes) fixed and shows the paged layout admitting more concurrent
+tasks — tasks reserve their actual peak residency, not a worst-case slot.
+
+  PYTHONPATH=src python -m benchmarks.kv_pressure [--engine]
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, save_json
+
+SLOT_TOKENS = 512           # the slot layout's per-task reservation
+PAGE_TOKENS = 16            # the paged layout's granularity
+
+
+class _TrackingExec:
+    """Executor wrapper counting resident tasks (prefilled, not released) and
+    the largest decode batch — the observable 'admitted batch' of a run."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.resident = 0
+        self.peak_resident = 0
+        self.peak_batch = 0
+
+    def prefill(self, task):
+        self.resident += 1
+        self.peak_resident = max(self.peak_resident, self.resident)
+        return self.inner.prefill(task)
+
+    def decode(self, tasks):
+        self.peak_batch = max(self.peak_batch, len(tasks))
+        return self.inner.decode(tasks)
+
+    def release(self, task):
+        self.resident -= 1
+        return self.inner.release(task)
+
+    def latency_model(self):
+        return self.inner.latency_model()
+
+
+def _budget(pool_tokens: int, page_tokens: int):
+    from repro.core.selection import PageBudget
+    return PageBudget(total_pages=max(1, pool_tokens // page_tokens),
+                      page_size=page_tokens, prompt_cap=SLOT_TOKENS // 2)
+
+
+def _run_sim(pool_tokens: int, page_tokens: int, rate: float, seed: int):
+    from repro.core.latency_model import paper_fig1_model
+    from repro.core.schedulers import SliceScheduler
+    from repro.data.workload import poisson_workload
+    from repro.serving.executor import SimExecutor
+    from repro.serving.loop import run_serving_loop
+    from repro.serving.metrics import summarize
+
+    lat = paper_fig1_model()
+    tasks = poisson_workload(rate_per_s=rate, duration_s=60, seed=seed,
+                             realtime_frac=0.5, voice_output_len=96,
+                             qa_output_len=96)
+    sched = SliceScheduler(lat, page_budget=_budget(pool_tokens, page_tokens))
+    ex = _TrackingExec(SimExecutor(lat))
+    res = run_serving_loop(sched, ex, tasks)
+    s = summarize(res.tasks)
+    return {"slo": s["all"].slo, "rt_slo": s["realtime"].slo,
+            "peak_resident": ex.peak_resident, "peak_batch": ex.peak_batch,
+            "finished": sum(1 for t in res.tasks if t.finished),
+            "n": s["all"].n}
+
+
+def _run_engine():
+    """Real tiny engines at equal KV bytes: 2 slots x 64 tokens vs
+    8 pages x 16 tokens. Short tasks -> the paged engine runs all four
+    concurrently while the slot engine can never hold more than two."""
+    from repro.configs import get_config
+    from repro.core.schedulers import SliceScheduler
+    from repro.core.selection import PageBudget
+    from repro.core.task import qa_task
+    from repro.serving.executor import JaxExecutor, PagedJaxExecutor
+    from repro.serving.loop import run_serving_loop
+    from repro.serving.metrics import summarize
+
+    cfg = get_config("smollm-360m").reduced()
+    out = {}
+    for layout in ("slot", "paged"):
+        if layout == "slot":
+            ex = JaxExecutor(cfg, max_slots=2, max_seq=64)
+            budget = PageBudget(total_pages=2, page_size=64, prompt_cap=32)
+        else:
+            ex = PagedJaxExecutor(cfg, n_pages=8, page_size=16, max_seq=64,
+                                  max_batch=8)
+            budget = ex.page_budget()
+        lat = ex.latency_model()
+        tasks = [qa_task(arrival_ms=5.0 * i, output_len=6, prompt_len=8)
+                 for i in range(4)]
+        for t in tasks:
+            t.slo.tpot_ms = max(t.slo.tpot_ms, 4 * lat.decode_ms(4))
+        track = _TrackingExec(ex)
+        res = run_serving_loop(
+            SliceScheduler(lat, page_budget=budget), track, tasks)
+        s = summarize(res.tasks)
+        out[layout] = {"peak_resident": track.peak_resident,
+                       "peak_batch": track.peak_batch,
+                       "slo": s["all"].slo,
+                       "finished": sum(1 for t in res.tasks if t.finished)}
+        emit(f"kv_pressure/engine/{layout}/peak_resident",
+             track.peak_resident)
+        emit(f"kv_pressure/engine/{layout}/slo", round(s["all"].slo, 4))
+    assert out["paged"]["peak_resident"] > out["slot"]["peak_resident"], out
+    return out
+
+
+def run(engine: bool = False) -> None:
+    payload = {"sim": {}, "engine": None}
+    for pool_tokens in (1024, 2048, 4096):
+        for layout, page_tokens in (("slot", SLOT_TOKENS),
+                                    ("paged", PAGE_TOKENS)):
+            acc = [_run_sim(pool_tokens, page_tokens, rate=1.5, seed=s)
+                   for s in (1, 2, 3)]
+            row = {k: sum(a[k] for a in acc) / len(acc) for k in acc[0]}
+            payload["sim"][f"{layout}/{pool_tokens}"] = row
+            emit(f"kv_pressure/{layout}/pool={pool_tokens}/slo",
+                 round(row["slo"], 4))
+            emit(f"kv_pressure/{layout}/pool={pool_tokens}/peak_resident",
+                 round(row["peak_resident"], 2))
+    if engine:
+        payload["engine"] = _run_engine()
+    save_json("kv_pressure", payload)
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--engine", action="store_true",
+                    help="also run the real-JAX-engine equal-bytes check")
+    args = ap.parse_args()
+    print("name,value,derived")
+    run(engine=args.engine)

@@ -15,12 +15,13 @@ def main() -> None:
     ap.add_argument("--skip-engine", action="store_true",
                     help="skip real-JAX-engine measurements (faster)")
     ap.add_argument("--only", default=None,
-                    help="comma-separated subset: fig1,table2,fig7,fig10,fig11")
+                    help="comma-separated subset: "
+                         "fig1,table2,fig7,fig10,fig11,kv")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
-    from benchmarks import (dynamic_slo, latency_vs_batch, ratio_sweep,
-                            static_tpot, workload_sweep)
+    from benchmarks import (dynamic_slo, kv_pressure, latency_vs_batch,
+                            ratio_sweep, static_tpot, workload_sweep)
 
     print("name,value,derived")
     t0 = time.time()
@@ -34,6 +35,8 @@ def main() -> None:
         ratio_sweep.run()
     if only is None or "fig11" in only:
         workload_sweep.run()
+    if only is None or "kv" in only:
+        kv_pressure.run(engine=not args.skip_engine)
     print(f"total_wall_s,{time.time() - t0:.1f},", flush=True)
 
 

@@ -19,7 +19,8 @@ from repro.core.latency_model import LatencyModel
 from repro.core.mask_matrix import (build_mask_matrix, column_batches,
                                     mask_matrix_period_ms, quantized_rate,
                                     stagger_columns)
-from repro.core.selection import PERIOD_BUDGET_MS, task_selection
+from repro.core.selection import (PERIOD_BUDGET_MS, PageBudget,
+                                  task_selection)
 from repro.core.task import Task
 
 
@@ -64,9 +65,16 @@ class SliceScheduler(Scheduler):
     def __init__(self, lat: LatencyModel, budget_ms: float = PERIOD_BUDGET_MS,
                  utility_adaptor: Optional[Callable[[Sequence[Task]], None]] = None,
                  drop_expired_realtime: bool = True,
-                 stagger: bool = False, prefill_headroom: bool = True):
+                 stagger: bool = False, prefill_headroom: bool = True,
+                 page_budget: Optional[PageBudget] = None):
         self.lat = lat
         self.budget_ms = budget_ms
+        # Memory-aware admission (DESIGN.md §3 adaptation #2): when serving a
+        # paged executor, selection reserves each task's peak KV pages and
+        # DEFERS tasks that do not fit — the utility ordering decides who gets
+        # pages under pressure, and deferred tasks re-enter at the next
+        # reschedule instead of crashing the engine on pool exhaustion.
+        self.page_budget = page_budget
         self.utility_adaptor = utility_adaptor
         self.drop_expired_realtime = drop_expired_realtime
         self.stagger = stagger
@@ -140,9 +148,16 @@ class SliceScheduler(Scheduler):
         if self.utility_adaptor is not None:
             self.utility_adaptor(candidates)        # Alg. 4 line 17
         self._drop_hopeless(now)
+        if self.page_budget is not None:
+            # a task whose peak residency can never fit the engine (seq cap
+            # or whole pool) would be deferred forever — drop it visibly
+            for t in candidates:
+                if not t.dropped and self.page_budget.infeasible(t):
+                    t.dropped = True
         candidates = [t for t in candidates if not t.dropped]
         selected, rest = task_selection(candidates, self.lat,
-                                        self.budget_ms - self._headroom_ms())
+                                        self.budget_ms - self._headroom_ms(),
+                                        page_budget=self.page_budget)
         self.batch = sorted(selected, key=lambda t: -quantized_rate(t.slo.tpot_ms))
         self.pool = rest
         live_ids = {t.task_id for t in self.batch}

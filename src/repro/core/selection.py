@@ -1,9 +1,12 @@
 """Task selection (paper §IV-C, Algorithm 2): utility-rate greedy admission
-under the 1000 ms cycle-period capacity test (Eq. 7).
+under the 1000 ms cycle-period capacity test (Eq. 7), optionally joined by a
+KV page-pool capacity test (beyond-paper, DESIGN.md §3 adaptation #2).
 """
 from __future__ import annotations
 
-from typing import List, Sequence, Tuple
+import dataclasses
+import math
+from typing import List, Optional, Sequence, Tuple
 
 from repro.core.latency_model import LatencyModel
 from repro.core.mask_matrix import estimate_period_ms, quantized_rate
@@ -12,8 +15,56 @@ from repro.core.task import Task
 PERIOD_BUDGET_MS = 1000.0
 
 
+@dataclasses.dataclass(frozen=True)
+class PageBudget:
+    """Memory-side admission constraint: the executor's KV arena holds
+    ``total_pages`` pages of ``page_size`` tokens each; a task's peak KV
+    residency is its (capped) prompt plus every output token. A slot-array
+    executor is the degenerate budget with page_size == max_seq, so both
+    layouts flow through the same admission math (EXPERIMENTS.md §KV-paging).
+
+    ``held_pages`` (optional, supplied by the executor) reports pages a task
+    holds RIGHT NOW: a running task that loses admission keeps its pages
+    until it finishes, so selection must count those holdings or it would
+    over-promise the pool and crash the engine mid-decode.
+
+    The latency model's memory ceiling (latency_model.py:112: decode on big
+    hosts is bounded by HBM residency, not per-step latency growth) becomes a
+    live constraint here instead of a comment.
+    """
+    total_pages: int
+    page_size: int
+    prompt_cap: Optional[int] = None   # executor truncates prompts to this
+    seq_cap: Optional[int] = None      # executor's hard per-task token limit
+    max_tasks: Optional[int] = None    # executor's compiled max decode batch
+    held_pages: Optional[object] = None  # Callable[[Task], int]
+
+    def peak_tokens(self, task: Task) -> int:
+        p = task.prompt_len if self.prompt_cap is None else min(
+            task.prompt_len, self.prompt_cap)
+        return p + task.output_len
+
+    def pages_for(self, task: Task) -> int:
+        return max(1, math.ceil(self.peak_tokens(task) / self.page_size))
+
+    def held_for(self, task: Task) -> int:
+        return int(self.held_pages(task)) if self.held_pages else 0
+
+    def infeasible(self, task: Task) -> bool:
+        """Task can NEVER run on this executor: its peak residency exceeds
+        the per-task sequence cap or the whole pool. Deferring it would be
+        silent starvation; the scheduler drops it visibly instead."""
+        if self.seq_cap is not None and self.peak_tokens(task) > self.seq_cap:
+            return True
+        return self.pages_for(task) > self.total_pages
+
+    def fits(self, tasks: Sequence[Task]) -> bool:
+        return sum(self.pages_for(t) for t in tasks) <= self.total_pages
+
+
 def task_selection(tasks: Sequence[Task], lat: LatencyModel,
-                   budget_ms: float = PERIOD_BUDGET_MS
+                   budget_ms: float = PERIOD_BUDGET_MS,
+                   page_budget: Optional[PageBudget] = None
                    ) -> Tuple[List[Task], List[Task]]:
     """Algorithm 2. Returns (selected batch b, remaining pool N).
 
@@ -22,18 +73,41 @@ def task_selection(tasks: Sequence[Task], lat: LatencyModel,
     estimated cycle period (Eq. 7, over the batch sorted by rate descending)
     stays under budget; the first violating task is returned to the pool and
     iteration stops.
+
+    With a page_budget, each admission additionally reserves the task's peak
+    KV pages. A task that does not fit in the remaining pages is DEFERRED
+    (returned with the pool, admission continues — a smaller task further
+    down the utility ordering may still fit), never dropped: memory pressure
+    is transient, so the task re-enters selection at the next reschedule.
     """
     pool = sorted(tasks, key=lambda t: (-t.utility_rate, t.arrival_ms, t.task_id))
     selected: List[Task] = []
+    deferred: List[Task] = []
     rates: List[int] = []
+    # Every candidate's CURRENT holdings are committed up front; admitting a
+    # task upgrades its reservation from held to peak. Tasks that stay
+    # unselected thus still account for the pages they physically occupy.
+    pages_used = (sum(page_budget.held_for(t) for t in pool)
+                  if page_budget is not None else 0)
     for i, t in enumerate(pool):
+        if page_budget is not None:
+            if (page_budget.max_tasks is not None
+                    and len(selected) >= page_budget.max_tasks):
+                deferred.append(t)          # engine's compiled batch ceiling
+                continue
+            need = page_budget.pages_for(t) - page_budget.held_for(t)
+            if pages_used + need > page_budget.total_pages:
+                deferred.append(t)          # defer, keep scanning
+                continue
         cand = rates + [quantized_rate(t.slo.tpot_ms)]
         cand.sort(reverse=True)  # sortTasksBySLORateDescending (Alg.2 line 11)
         if estimate_period_ms(cand, lat) >= budget_ms:
-            return selected, pool[i:]
+            return selected, deferred + pool[i:]
         selected.append(t)
         rates = cand
-    return selected, []
+        if page_budget is not None:
+            pages_used += need
+    return selected, deferred
 
 
 def selection_feasible(selected: Sequence[Task], lat: LatencyModel,

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.kernels import decode_attention as _da
 from repro.kernels import flash_prefill as _fp
+from repro.kernels import paged_attention as _pa
 from repro.kernels import ssd_scan as _ssd
 
 
@@ -37,6 +38,16 @@ def decode_attention(q, k_cache, v_cache, kv_pos, q_pos, *, window=None,
     return _da.decode_attention_kernel(q, k_cache, v_cache, kv_pos, q_pos,
                                        window=window, blk=blk,
                                        interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(q, k_pages, v_pages, page_table, q_pos, *,
+                           interpret: Optional[bool] = None):
+    """Paged flash-decode (page table via scalar prefetch). Shapes are
+    already page-aligned by construction, so no padding path is needed."""
+    return _pa.paged_decode_attention_kernel(
+        q, k_pages, v_pages, page_table, q_pos,
+        interpret=_auto_interpret(interpret))
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "qblk",

@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: GQA flash-decode over a PAGED KV cache.
+
+vLLM-style paged attention, TPU-native: the KV arena is a shared page pool
+``[n_pages, Hkv, page_size, hd]`` and each sequence names its pages through
+a ``[B, max_pages]`` page table. The table (plus per-sequence query
+positions) rides in as scalar-prefetch operands — available before the
+kernel body runs — so each grid step's BlockSpec index_map dereferences
+``page_table[b, j]`` to DMA exactly that sequence's j-th physical page into
+VMEM. No contiguous gather ever materializes in HBM; the indirection is
+free address arithmetic on the DMA descriptor.
+
+Grid: (batch, kv_heads, max_pages) — pages innermost so the online-softmax
+scratch state (m, l, acc) accumulates sequentially per (b, h), exactly as in
+decode_attention.py; unused table entries (-1) are masked, and their DMA is
+clamped to page 0 (harmless: the mask zeroes the contribution).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(pt_ref, qpos_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, page_size, scale):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    nj = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # [g, hd]
+    k = k_ref[0, 0].astype(jnp.float32)          # [psz, hd]
+    v = v_ref[0, 0].astype(jnp.float32)          # [psz, hd]
+    qp = qpos_ref[b]                             # scalar int32
+    page = pt_ref[b, j]                          # physical page id, -1 unused
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    pos = j * page_size + jax.lax.iota(jnp.int32, page_size)   # logical pos
+    keep = (page >= 0) & (pos <= qp)
+    s = jnp.where(keep[None, :], s, NEG_INF)     # [g, psz]
+
+    m_prev = m_ref[:, :1]
+    l_prev = l_ref[:, :1]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    # fully-masked page: m_new == NEG_INF makes exp(s - m_new) == 1 for
+    # masked lanes — re-mask so they contribute nothing.
+    p = jnp.where(keep[None, :], p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, -1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(j == nj - 1)
+    def _fin():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[:, :1], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_decode_attention_kernel(q, k_pages, v_pages, page_table, q_pos,
+                                  interpret: bool = False):
+    """q: [B,Hq,hd]; k/v_pages: [P,Hkv,psz,hd]; page_table: [B,maxp] int32
+    (-1 = unused); q_pos: [B] int32 — newest token's logical position.
+    Returns [B,Hq,hd]. Same contract as layers.paged_decode_attention."""
+    B, Hq, hd = q.shape
+    _, Hkv, psz, _ = k_pages.shape
+    maxp = page_table.shape[1]
+    g = Hq // Hkv
+    qg = q.reshape(B, Hkv, g, hd)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, maxp),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd), lambda b, h, j, pt, qp: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, psz, hd),
+                         lambda b, h, j, pt, qp: (jnp.maximum(pt[b, j], 0),
+                                                  h, 0, 0)),
+            pl.BlockSpec((1, 1, psz, hd),
+                         lambda b, h, j, pt, qp: (jnp.maximum(pt[b, j], 0),
+                                                  h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd),
+                               lambda b, h, j, pt, qp: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 128), jnp.float32),   # running max
+            pltpu.VMEM((g, 128), jnp.float32),   # running denom
+            pltpu.VMEM((g, hd), jnp.float32),    # running numerator
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, page_size=psz, scale=hd ** -0.5),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, g, hd), q.dtype),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), q_pos.astype(jnp.int32),
+      qg, k_pages, v_pages)
+    return out.reshape(B, Hq, hd)

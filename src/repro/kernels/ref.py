@@ -6,13 +6,21 @@ from typing import Optional
 
 import jax.numpy as jnp
 
-from repro.models.layers import attention, band_mask, decode_attention
+from repro.models.layers import (attention, band_mask, decode_attention,
+                                 paged_decode_attention)
 from repro.models.ssm import ssd_chunked
 
 
 def decode_attention_ref(q, k_cache, v_cache, kv_pos, q_pos, window=None):
     """Same contract as kernels.decode_attention.decode_attention_kernel."""
     return decode_attention(q, k_cache, v_cache, kv_pos, q_pos, window)
+
+
+def paged_decode_attention_ref(q, k_pages, v_pages, page_table, q_pos):
+    """Same contract as kernels.paged_attention.paged_decode_attention_kernel:
+    gather each sequence's pages into a contiguous view, then run the dense
+    decode-attention oracle over it."""
+    return paged_decode_attention(q, k_pages, v_pages, page_table, q_pos)
 
 
 def flash_prefill_ref(q, k, v, causal=True, window=None):

@@ -6,6 +6,10 @@ mesh (see dryrun.py for the lowering proof).
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
       --scheduler slice --rate 1.0 --duration 30
+
+  # paged KV arena + memory-aware SLICE admission (DESIGN.md §3 adapt. #2):
+  PYTHONPATH=src python -m repro.launch.serve --executor paged \
+      --pages 64 --page-size 16
 """
 from __future__ import annotations
 
@@ -17,11 +21,20 @@ def main():
     ap.add_argument("--arch", default="smollm-360m")
     ap.add_argument("--scheduler", default="slice",
                     choices=["slice", "orca", "fastserve"])
+    ap.add_argument("--executor", default="slot", choices=["slot", "paged"])
     ap.add_argument("--rate", type=float, default=1.0)
     ap.add_argument("--duration", type=float, default=20.0)
     ap.add_argument("--ratio", type=float, default=0.5)
     ap.add_argument("--slots", type=int, default=8)
     ap.add_argument("--max-seq", type=int, default=256)
+    ap.add_argument("--pages", type=int, default=None,
+                    help="paged executor: KV pool size in pages (default: "
+                         "the slot arena's bytes, slots*max_seq/page_size)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="paged executor: tokens per page")
+    ap.add_argument("--paged-kernel", action="store_true",
+                    help="paged executor: use the Pallas scalar-prefetch "
+                         "kernel instead of the jnp gather")
     ap.add_argument("--reduced", action="store_true", default=True,
                     help="use the reduced (CPU-feasible) config")
     ap.add_argument("--seed", type=int, default=0)
@@ -31,7 +44,7 @@ def main():
     from repro.core.schedulers import (FastServeScheduler, OrcaScheduler,
                                        SliceScheduler)
     from repro.data.workload import poisson_workload
-    from repro.serving.executor import JaxExecutor
+    from repro.serving.executor import JaxExecutor, PagedJaxExecutor
     from repro.serving.loop import run_serving_loop
     from repro.serving.metrics import summarize
 
@@ -41,10 +54,20 @@ def main():
     if cfg.is_encoder_only:
         raise SystemExit(f"{args.arch} is encoder-only: no decode serving "
                          "(DESIGN.md §4)")
-    ex = JaxExecutor(cfg, max_slots=args.slots, max_seq=args.max_seq,
-                     seed=args.seed)
+    page_budget = None
+    n_pages = args.pages or (args.slots * args.max_seq) // args.page_size
+    if args.executor == "paged":
+        ex = PagedJaxExecutor(cfg, n_pages=n_pages,
+                              page_size=args.page_size,
+                              max_seq=args.max_seq, seed=args.seed,
+                              max_batch=args.slots,
+                              use_paged_kernel=args.paged_kernel)
+        page_budget = ex.page_budget()
+    else:
+        ex = JaxExecutor(cfg, max_slots=args.slots, max_seq=args.max_seq,
+                         seed=args.seed)
     lat = ex.latency_model()
-    print(f"engine {cfg.name}: l(1)={lat.decode_ms(1):.2f}ms "
+    print(f"engine {cfg.name} ({args.executor}): l(1)={lat.decode_ms(1):.2f}ms "
           f"l({args.slots})={lat.decode_ms(args.slots):.2f}ms")
     # scale the paper's workload SLOs to this engine's speed
     scale = max(lat.decode_ms(max(2, args.slots // 2)) / 50.0, 0.02)
@@ -57,9 +80,22 @@ def main():
         if t.slo.deadline_ms:
             t.slo.deadline_ms *= max(scale, 1.0)
         t.prompt_len = min(t.prompt_len, args.max_seq // 4)
-    sched = {"slice": lambda: SliceScheduler(lat),
-             "orca": OrcaScheduler,
-             "fastserve": FastServeScheduler}[args.scheduler]()
+        # keep every task inside the engine's per-task cap: the paged engine
+        # would otherwise drop it as statically infeasible (and the slot
+        # engine would silently ring-wrap past max_seq)
+        t.output_len = min(t.output_len, args.max_seq // 2)
+    # Orca/FastServe have no memory model — cap their batch so worst-case
+    # residency (prompt cap + output cap per task) fits the engine; only
+    # SLICE gets the live page-budget admission.
+    baseline_batch = args.slots
+    if args.executor == "paged":
+        peak = args.max_seq // 4 + args.max_seq // 2
+        baseline_batch = max(1, min(args.slots,
+                                    (n_pages * args.page_size) // peak))
+    sched = {"slice": lambda: SliceScheduler(lat, page_budget=page_budget),
+             "orca": lambda: OrcaScheduler(max_batch=baseline_batch),
+             "fastserve": lambda: FastServeScheduler(max_batch=baseline_batch),
+             }[args.scheduler]()
     res = run_serving_loop(sched, ex, tasks, max_ms=3e7)
     s = summarize(res.tasks)
     print(f"{args.scheduler}: n={s['all'].n} SLO={s['all'].slo:.1%} "

@@ -164,6 +164,46 @@ def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
     return out.reshape(B, Hq, hd)
 
 
+def gather_pages(pages: jnp.ndarray, page_table: jnp.ndarray) -> jnp.ndarray:
+    """pages: [P,Hkv,psz,hd]; page_table: [B,maxp] (-1 = unused, gathered as
+    page 0 and masked by the caller via kv positions).
+    Returns the contiguous view [B,Hkv,maxp*psz,hd]."""
+    B, maxp = page_table.shape
+    _, Hkv, psz, hd = pages.shape
+    gathered = pages[jnp.maximum(page_table, 0)]       # [B,maxp,Hkv,psz,hd]
+    return (gathered.transpose(0, 2, 1, 3, 4)
+            .reshape(B, Hkv, maxp * psz, hd))
+
+
+def paged_kv_positions(page_table: jnp.ndarray, page_size: int) -> jnp.ndarray:
+    """Logical token position per gathered KV slot, -1 where the page-table
+    entry is unused — the paged analogue of the ring cache's kv_pos array."""
+    B, maxp = page_table.shape
+    pos = jnp.arange(maxp * page_size, dtype=jnp.int32)
+    valid = jnp.repeat(page_table >= 0, page_size, axis=1)
+    return jnp.where(valid, pos[None, :], -1)
+
+
+def paged_decode_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
+                           v_pages: jnp.ndarray, page_table: jnp.ndarray,
+                           q_pos: jnp.ndarray) -> jnp.ndarray:
+    """Single-token decode over a PAGED KV cache (pure-jnp oracle for the
+    Pallas kernel in repro.kernels.paged_attention).
+
+    q: [B,Hq,hd] (RoPE'd); k/v_pages: [P,Hkv,psz,hd] — the shared page arena,
+    written at absolute positions; page_table: [B,maxp] physical page id per
+    logical page, -1 = unused; q_pos: [B] position of the newest token.
+    Attends over logical positions 0..q_pos (paged caches are append-only —
+    no ring wrap, so no sliding window here; windowed archs keep the
+    ring-slot path, DESIGN.md §3 adaptation #2).
+    """
+    psz = k_pages.shape[2]
+    kc = gather_pages(k_pages, page_table)
+    vc = gather_pages(v_pages, page_table)
+    kv_pos = paged_kv_positions(page_table, psz)
+    return decode_attention(q, kc, vc, kv_pos, q_pos)
+
+
 # ---------------------------------------------------------------- MLP
 
 def gated_mlp(x: jnp.ndarray, wg: jnp.ndarray, wu: jnp.ndarray,

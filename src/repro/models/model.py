@@ -370,3 +370,79 @@ def decode_step(cfg: ArchConfig, params: Params, cache: Cache,
     new_cache.update(new_layer_caches)
     logits = unembed(cfg, params, x)
     return logits, new_cache
+
+
+# ------------------------------------------------------------ paged decode
+
+def init_paged_cache(cfg: ArchConfig, n_pages: int, page_size: int,
+                     dtype=jnp.float32) -> Cache:
+    """Shared KV page arena: k/v_pages [L, n_pages, Hkv, page_size, hd].
+    Page ownership lives in serving.kv_pool.KVPagePool; sequences address the
+    arena through per-step [B, max_pages] page tables (decode_step_paged)."""
+    assert cfg.has_attention, "paged KV cache needs attention layers"
+    assert not cfg.has_ssm, (
+        "SSM state is O(1) per sequence — nothing to page; use init_cache")
+    shape = (cfg.n_layers, n_pages, cfg.n_kv_heads, page_size, cfg.head_dim)
+    return {"k_pages": jnp.zeros(shape, dtype),
+            "v_pages": jnp.zeros(shape, dtype)}
+
+
+def decode_step_paged(cfg: ArchConfig, params: Params, pages: Cache,
+                      page_table: jnp.ndarray, lengths: jnp.ndarray,
+                      tokens: jnp.ndarray, active: Optional[jnp.ndarray] = None,
+                      opts: ModelOptions = ModelOptions(),
+                      use_kernel: bool = False) -> Tuple[jnp.ndarray, Cache]:
+    """One decode iteration over the paged KV arena (DESIGN.md §3
+    adaptation #2).
+
+    pages: init_paged_cache dict; page_table: [B, maxp] physical page per
+    logical page (-1 unused; row b must cover lengths[b]+1 tokens — the pool
+    extends BEFORE the step); lengths: [B] cached tokens per row (the new
+    token is written at logical position lengths[b]); tokens: [B] int32;
+    active: [B] bool — inactive rows write nothing (their scatter index is
+    out-of-bounds and dropped) and their logits are garbage to be ignored.
+
+    Returns (logits [B,V], new pages). Lengths/page tables are host-side
+    pool state, not device state — the caller advances them.
+    """
+    assert cfg.causal and cfg.has_attention and not cfg.has_ssm
+    B = tokens.shape[0]
+    if active is None:
+        active = jnp.ones((B,), bool)
+    n_pages, psz = pages["k_pages"].shape[1], pages["k_pages"].shape[3]
+    x = params["embed"][tokens]                    # [B,D]
+    q_pos = lengths
+    logical = q_pos // psz
+    off = q_pos % psz
+    pt_row = page_table[jnp.arange(B), logical]    # phys page of the new token
+    # out-of-bounds index => scatter dropped (inactive / untabled rows)
+    phys = jnp.where(active & (pt_row >= 0), pt_row, n_pages)
+
+    def body(x, xs):
+        bp, lc = xs
+        kp, vp = lc["k"], lc["v"]                  # [P,Hkv,psz,hd]
+        h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
+        q = (h @ bp["wq"]).reshape(B, cfg.n_heads, cfg.head_dim)
+        k = (h @ bp["wk"]).reshape(B, cfg.n_kv_heads, cfg.head_dim)
+        v = (h @ bp["wv"]).reshape(B, cfg.n_kv_heads, cfg.head_dim)
+        q = shard(L.apply_rope(q[:, None], q_pos[:, None],
+                               cfg.rope_theta)[:, 0], ("b", "m", None))
+        k = L.apply_rope(k[:, None], q_pos[:, None], cfg.rope_theta)[:, 0]
+        kp = kp.at[phys, :, off].set(k, mode="drop")
+        vp = vp.at[phys, :, off].set(v, mode="drop")
+        if use_kernel:
+            from repro.kernels import ops as _kops
+            a = _kops.paged_decode_attention(q, kp, vp, page_table, q_pos)
+        else:
+            a = L.paged_decode_attention(q, kp, vp, page_table, q_pos)
+        x = x + a.reshape(B, cfg.q_dim) @ bp["wo"]
+        f_out, _ = _ffn(cfg, bp, x, "dense" if cfg.block_kind != "moe"
+                        else opts.moe_impl)
+        return x + f_out, {"k": kp, "v": vp}
+
+    layer_pages = {"k": pages["k_pages"], "v": pages["v_pages"]}
+    x, new_layer_pages = jax.lax.scan(body, x, (params["blocks"], layer_pages),
+                                      unroll=opts.unroll)
+    logits = unembed(cfg, params, x)
+    return logits, {"k_pages": new_layer_pages["k"],
+                    "v_pages": new_layer_pages["v"]}

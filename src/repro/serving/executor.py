@@ -1,11 +1,20 @@
 """Executors: the data plane behind the schedulers.
 
-SimExecutor     — discrete-event: step costs come from a LatencyModel
-                  (calibrated to the paper's Fig. 1 testbed). Used for the
-                  paper-scale reproduction benchmarks.
-JaxExecutor     — a real JAX engine: tiny model, slot-based KV cache,
-                  per-column active-mask decode (the TPU mapping of the
-                  decode-mask matrix), measured wall-clock latencies.
+SimExecutor      — discrete-event: step costs come from a LatencyModel
+                   (calibrated to the paper's Fig. 1 testbed). Used for the
+                   paper-scale reproduction benchmarks.
+JaxExecutor      — a real JAX engine: tiny model, slot-based KV cache,
+                   per-column active-mask decode (the TPU mapping of the
+                   decode-mask matrix), measured wall-clock latencies.
+PagedJaxExecutor — same engine over a paged KV arena (kv_pool.KVPagePool +
+                   model.decode_step_paged): admission is bounded by the
+                   page pool — actual residency — not a fixed slot count
+                   (DESIGN.md §3 adaptation #2). Exposes page_budget() for
+                   SLICE's memory-aware selection.
+
+Both JAX executors record ``last_logits`` ([len(tasks), vocab] in task
+order) after every decode — the paged-vs-slot equivalence contract tested
+in tests/test_kv_pool.py.
 """
 from __future__ import annotations
 
@@ -15,7 +24,34 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.latency_model import LatencyModel, MeasuredLatencyModel
+from repro.core.selection import PageBudget
 from repro.core.task import Task
+from repro.serving.kv_pool import KVPagePool
+
+
+_PREFILL_PRIOR = [(64, 10.0), (512, 40.0)]   # prefill ms prior until measured
+
+
+def _pow2_buckets(limit: int):
+    """1, 2, 4, ... capped at limit — the compiled decode batch shapes shared
+    by bucketed compaction and the paged executor."""
+    b = 1
+    while b < limit:
+        yield b
+        b *= 2
+    yield limit
+
+
+def _probe_latency_curve(executor: "Executor", warm_tasks, probes):
+    """Warm min-of-3 decode timings at each probe batch size over tasks the
+    caller has already admitted to the engine."""
+    samples = []
+    for b in probes:
+        sub = warm_tasks[:b]
+        executor.decode(sub)  # warm compile/caches
+        ms = min(executor.decode(sub) for _ in range(3))
+        samples.append((b, ms))
+    return MeasuredLatencyModel(samples, _PREFILL_PRIOR)
 
 
 class Executor:
@@ -90,6 +126,7 @@ class JaxExecutor(Executor):
             self._build_bucket_steps()
         self._prefill_jit = {}
         self._rng = np.random.default_rng(seed)
+        self.last_logits: Optional[np.ndarray] = None
 
     # -- bucketed compaction (DESIGN.md §3 adaptation #1) --
     # Masked decode over the full slot array costs l(max_slots) regardless of
@@ -98,13 +135,6 @@ class JaxExecutor(Executor):
     # state into the smallest power-of-two bucket, decodes that, and
     # scatters back: step cost really falls with column sparsity, with only
     # log2(max_slots) compiled variants.
-    def _bucket_sizes(self):
-        b = 1
-        while b < self.max_slots:
-            yield b
-            b *= 2
-        yield self.max_slots
-
     def _build_bucket_steps(self):
         jax, jnp, M = self.jax, self.jnp, self.M
         cfg = self.cfg
@@ -125,7 +155,7 @@ class JaxExecutor(Executor):
                 out["kv_pos"] = cache["kv_pos"].at[idx].set(new_sub["kv_pos"])
             return logits, out
 
-        for b in self._bucket_sizes():
+        for b in _pow2_buckets(self.max_slots):
             idx = jnp.zeros((b,), jnp.int32)
             valid = jnp.zeros((b,), bool)
             self._bucket_jit[b] = jax.jit(step).lower(
@@ -204,6 +234,7 @@ class JaxExecutor(Executor):
                 jnp.asarray(valid))
             logits.block_until_ready()
             ms = (time.perf_counter() - t0) * 1000.0
+            self.last_logits = np.asarray(logits)[: len(slots)]
             new_toks = jnp.argmax(logits, -1).astype(jnp.int32)
             upd = jnp.zeros((self.max_slots,), bool).at[jnp.asarray(idx)].set(
                 jnp.asarray(valid))
@@ -218,6 +249,7 @@ class JaxExecutor(Executor):
             self.params, self.cache, self.tokens, jnp.asarray(active))
         logits.block_until_ready()
         ms = (time.perf_counter() - t0) * 1000.0
+        self.last_logits = np.asarray(logits)[slots]
         new_toks = jnp.argmax(logits, -1).astype(jnp.int32)
         self.tokens = jnp.where(jnp.asarray(active), new_toks, self.tokens)
         return ms
@@ -226,16 +258,188 @@ class JaxExecutor(Executor):
         """Measure l(b) on the live engine (warm jit) — MeasuredLatencyModel."""
         from repro.core.task import qa_task
         probes = [b for b in (1, 2, 4, 8, self.max_slots) if b <= self.max_slots]
-        samples = []
         warm_tasks = [qa_task() for _ in range(self.max_slots)]
         for t in warm_tasks:
             self._assign_slot(t)
-        for b in probes:
-            sub = warm_tasks[:b]
-            self.decode(sub)  # warm compile
-            ms = min(self.decode(sub) for _ in range(3))
-            samples.append((b, ms))
+        lat = _probe_latency_curve(self, warm_tasks, probes)
         for t in warm_tasks:
             self.release(t)
-        pre = [(64, 10.0), (512, 40.0)]
-        return MeasuredLatencyModel(samples, pre)
+        return lat
+
+
+class PagedJaxExecutor(Executor):
+    """Real JAX engine over a paged KV arena with continuous batching.
+
+    Where JaxExecutor reserves a contiguous ``max_seq`` buffer per slot —
+    admission capped at ``max_slots`` no matter how short the sequences —
+    this executor backs every task with ``ceil(tokens / page_size)`` pages
+    from a shared pool. Concurrency is whatever fits in the pool: at equal
+    KV bytes, short-sequence workloads admit a strictly larger batch
+    (benchmarks/kv_pressure.py, EXPERIMENTS.md §KV-paging).
+
+    The decode step batch is bucketed to the next power of two (compiled
+    once per bucket, AOT) and runs model.decode_step_paged: page-table
+    indirection in the data plane, either as a pure-jnp gather (portable,
+    default) or the Pallas scalar-prefetch kernel (``use_paged_kernel=True``,
+    DESIGN.md §3 adaptation #2).
+
+    Restrictions: attention-only archs (SSM state is O(1)/task — nothing to
+    page), and sequences are hard-capped at max_seq (the paged cache is
+    append-only; it never ring-wraps like the slot path's long-context mode).
+    """
+
+    def __init__(self, cfg, params=None, n_pages: int = 64,
+                 page_size: int = 16, max_seq: int = 512, seed: int = 0,
+                 max_batch: int = 16, use_paged_kernel: bool = False):
+        import jax
+        import jax.numpy as jnp
+        from repro.models import model as M
+        if not cfg.has_attention or cfg.has_ssm:
+            raise ValueError("PagedJaxExecutor needs a pure-attention arch "
+                             "(SSM state is unpaged); use JaxExecutor")
+        # Sliding-window archs are safe WITHOUT a window mask here: the slot
+        # engine only applies the window when buf_len <= window, and this
+        # engine hard-caps sequences at max_seq, so q_pos - pos < max_seq <=
+        # window keeps the mask inert in exactly that regime. Beyond max_seq
+        # the slot ring would silently wrap; we raise instead (decode()).
+        self.jax, self.jnp, self.M = jax, jnp, M
+        self.cfg = cfg
+        self.params = params if params is not None else M.init_params(
+            cfg, jax.random.PRNGKey(seed))
+        self.page_size = page_size
+        self.n_pages = n_pages
+        self.max_seq = max_seq
+        self.max_batch = max_batch
+        self.use_paged_kernel = use_paged_kernel
+        self.pool = KVPagePool(n_pages, page_size)
+        self.max_pages_per_seq = -(-max_seq // page_size)
+        self.pages = M.init_paged_cache(cfg, n_pages, page_size)
+        self.last_tok: Dict[int, int] = {}
+        self.last_logits: Optional[np.ndarray] = None
+        self._step_jit: Dict[int, Any] = {}
+        self._build_steps()
+        self._prefill_jit: Dict[Tuple[int, ...], Any] = {}
+        self._rng = np.random.default_rng(seed)
+
+    # -- compiled steps (one per power-of-two batch bucket) --
+    def _build_steps(self):
+        jax, jnp, M = self.jax, self.jnp, self.M
+        cfg, maxp = self.cfg, self.max_pages_per_seq
+
+        def step(params, pages, pt, lengths, tokens, active):
+            return M.decode_step_paged(cfg, params, pages, pt, lengths,
+                                       tokens, active,
+                                       use_kernel=self.use_paged_kernel)
+
+        for b in _pow2_buckets(self.max_batch):
+            pt = jnp.full((b, maxp), -1, jnp.int32)
+            ln = jnp.zeros((b,), jnp.int32)
+            tk = jnp.zeros((b,), jnp.int32)
+            av = jnp.zeros((b,), bool)
+            self._step_jit[b] = jax.jit(step).lower(
+                self.params, self.pages, pt, ln, tk, av).compile()
+
+    def page_budget(self) -> PageBudget:
+        """Admission-side view of the pool for SliceScheduler: peak pages per
+        task (capped prompt + full output) against the pool, counting pages
+        currently held by running tasks. seq_cap/max_tasks mirror this
+        engine's hard limits so admission never composes a batch the engine
+        would raise on."""
+        return PageBudget(
+            total_pages=self.n_pages, page_size=self.page_size,
+            prompt_cap=self.max_seq // 2, seq_cap=self.max_seq,
+            max_tasks=self.max_batch,
+            held_pages=lambda t: (len(self.pool.page_table(t.task_id))
+                                  if self.pool.holds(t.task_id) else 0))
+
+    # -- ops --
+    def prefill(self, task: Task) -> float:
+        jax, jnp, M = self.jax, self.jnp, self.M
+        L = min(task.prompt_len, self.max_seq // 2)
+        if self.pool.holds(task.task_id):
+            raise RuntimeError(f"task {task.task_id} already prefilled")
+        phys = self.pool.alloc(task.task_id, L)      # OutOfPages -> caller
+        toks = jnp.asarray(self._rng.integers(0, self.cfg.vocab_size, (1, L)),
+                           jnp.int32)
+        key = (L,)
+        if key not in self._prefill_jit:
+            # AOT-compile so jit tracing never pollutes the measured latency
+            # (same rationale as JaxExecutor.prefill).
+            fn = jax.jit(
+                lambda p, t: M.prefill(self.cfg, p, t, buf_len=self.max_seq))
+            self._prefill_jit[key] = fn.lower(self.params, toks).compile()
+        t0 = time.perf_counter()
+        last, cache1 = self._prefill_jit[key](self.params, toks)
+        last.block_until_ready()
+        ms = (time.perf_counter() - t0) * 1000.0
+        # scatter the contiguous single-row cache into the allocated pages
+        n_alloc, psz = len(phys), self.page_size
+        span = n_alloc * psz
+        idx = jnp.asarray(phys, jnp.int32)
+        for name, src in (("k_pages", cache1["k"]), ("v_pages", cache1["v"])):
+            # [L,1,Hkv,max_seq,hd] -> [L,n_alloc,Hkv,psz,hd]
+            view = (src[:, 0, :, :span, :]
+                    .reshape(src.shape[0], src.shape[2], n_alloc, psz, -1)
+                    .swapaxes(1, 2))
+            self.pages[name] = self.pages[name].at[:, idx].set(view)
+        self.last_tok[task.task_id] = int(jnp.argmax(last[0]))
+        return ms
+
+    def decode(self, tasks: Sequence[Task]) -> float:
+        jnp = self.jnp
+        if len(tasks) > self.max_batch:
+            raise RuntimeError(f"decode batch {len(tasks)} > max_batch "
+                               f"{self.max_batch}")
+        ids = [t.task_id for t in tasks]
+        lengths = [self.pool.length(i) for i in ids]
+        for i, ln in zip(ids, lengths):
+            if ln + 1 > self.max_seq:
+                raise RuntimeError(f"task {i} exceeds max_seq {self.max_seq}")
+            self.pool.extend(i, ln + 1)              # page for the new token
+        b = 1
+        while b < len(tasks):
+            b *= 2
+        b = min(b, self.max_batch)
+        maxp = self.max_pages_per_seq
+        pt = np.full((b, maxp), -1, np.int32)
+        for r, i in enumerate(ids):
+            row = self.pool.page_table(i)
+            pt[r, : len(row)] = row
+        ln = np.zeros((b,), np.int32)
+        ln[: len(ids)] = lengths
+        tk = np.zeros((b,), np.int32)
+        tk[: len(ids)] = [self.last_tok[i] for i in ids]
+        av = np.zeros((b,), bool)
+        av[: len(ids)] = True
+        t0 = time.perf_counter()
+        logits, self.pages = self._step_jit[b](
+            self.params, self.pages, jnp.asarray(pt), jnp.asarray(ln),
+            jnp.asarray(tk), jnp.asarray(av))
+        logits.block_until_ready()
+        ms = (time.perf_counter() - t0) * 1000.0
+        self.last_logits = np.asarray(logits)[: len(ids)]
+        new_toks = np.argmax(self.last_logits, -1)
+        for i, tok in zip(ids, new_toks):
+            self.last_tok[i] = int(tok)
+        return ms
+
+    def release(self, task: Task) -> None:
+        self.pool.free(task.task_id)
+        self.last_tok.pop(task.task_id, None)
+
+    def latency_model(self) -> LatencyModel:
+        """Measure l(b) on the live engine (warm jit) — MeasuredLatencyModel."""
+        from repro.core.task import qa_task
+        # each warm task may grow ~32 tokens across the probe decodes;
+        # reserve that many pages so probing never exhausts the pool
+        nmax = min(self.max_batch,
+                   max(1, self.n_pages // max(1, self.pool.pages_for(32))))
+        probes = sorted({b for b in (1, 2, 4, 8, nmax) if b <= nmax})
+        warm = [qa_task() for _ in range(nmax)]
+        for t in warm:
+            self.pool.alloc(t.task_id, 1)
+            self.last_tok[t.task_id] = 0
+        lat = _probe_latency_curve(self, warm, probes)
+        for t in warm:
+            self.release(t)
+        return lat

@@ -1,0 +1,114 @@
+"""Paged KV-cache block pool (DESIGN.md §3 adaptation #2).
+
+The slot-based ``JaxExecutor`` reserves a contiguous ``max_seq`` KV buffer
+per admitted task, so admission is bounded by worst-case memory:
+``max_slots`` tasks regardless of how short their sequences actually are.
+This pool instead carves the KV arena into fixed-size *pages* of
+``page_size`` tokens each and hands them out on demand — a task holding
+``n`` cached tokens occupies exactly ``ceil(n / page_size)`` pages. The
+free list is the single source of truth for residency, which is what lets
+SLICE's admission (core.selection.PageBudget) reason about *actual* memory
+instead of a fixed slot count.
+
+Pure bookkeeping — no jax. The executor owns the physical page arrays
+(``k_pages``/``v_pages``: [L, n_pages, Hkv, page_size, hd]); this class
+owns which page ids belong to which task. A slot array is the degenerate
+pool with ``page_size == max_seq`` and one page per task, which is how the
+kv_pressure benchmark compares the two layouts at equal bytes.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+
+class OutOfPages(RuntimeError):
+    """Raised when an alloc/extend cannot be satisfied. State is unchanged —
+    callers (scheduler admission) defer the task rather than drop it."""
+
+
+class KVPagePool:
+    def __init__(self, n_pages: int, page_size: int):
+        if n_pages <= 0 or page_size <= 0:
+            raise ValueError("n_pages and page_size must be positive")
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self._free: List[int] = list(range(n_pages))
+        self._table: Dict[int, List[int]] = {}   # owner -> page ids, in order
+        self._len: Dict[int, int] = {}           # owner -> cached tokens
+
+    # ---- accounting ----
+    def pages_for(self, n_tokens: int) -> int:
+        """Pages needed to hold n_tokens (ceil)."""
+        return -(-max(n_tokens, 0) // self.page_size)
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.n_pages - len(self._free)
+
+    def owners(self) -> List[int]:
+        return list(self._table)
+
+    def page_table(self, owner: int) -> List[int]:
+        return list(self._table[owner])
+
+    def length(self, owner: int) -> int:
+        return self._len[owner]
+
+    def holds(self, owner: int) -> bool:
+        return owner in self._table
+
+    # ---- alloc / extend / free ----
+    def alloc(self, owner: int, n_tokens: int) -> List[int]:
+        """Reserve pages for a new owner's first n_tokens. Returns page ids."""
+        if owner in self._table:
+            raise ValueError(f"owner {owner} already holds pages")
+        need = self.pages_for(n_tokens)
+        if need > len(self._free):
+            raise OutOfPages(
+                f"need {need} pages for {n_tokens} tokens, "
+                f"{len(self._free)}/{self.n_pages} free")
+        pages = [self._free.pop(0) for _ in range(need)]
+        self._table[owner] = pages
+        self._len[owner] = n_tokens
+        return list(pages)
+
+    def extend(self, owner: int, new_len: int) -> List[int]:
+        """Grow an owner's allocation to cover new_len tokens. Returns the
+        newly allocated page ids (possibly empty). Shrinking is a no-op:
+        pages are only returned wholesale by free()."""
+        if owner not in self._table:
+            raise ValueError(f"owner {owner} holds no pages")
+        if new_len <= self._len[owner]:
+            return []
+        grow = self.pages_for(new_len) - len(self._table[owner])
+        if grow > len(self._free):
+            raise OutOfPages(
+                f"extend to {new_len} tokens needs {grow} more pages, "
+                f"{len(self._free)}/{self.n_pages} free")
+        fresh = [self._free.pop(0) for _ in range(max(grow, 0))]
+        self._table[owner].extend(fresh)
+        self._len[owner] = new_len
+        return fresh
+
+    def free(self, owner: int) -> int:
+        """Return all of owner's pages to the pool. Returns #pages freed.
+        Unknown owners are a no-op (idempotent release)."""
+        pages = self._table.pop(owner, None)
+        self._len.pop(owner, None)
+        if pages is None:
+            return 0
+        self._free.extend(pages)
+        return len(pages)
+
+    def check(self) -> None:
+        """Invariant audit: every page accounted for exactly once."""
+        held = [p for pages in self._table.values() for p in pages]
+        seen = held + self._free
+        assert len(seen) == self.n_pages, (len(seen), self.n_pages)
+        assert len(set(seen)) == self.n_pages, "page owned twice"
+        for o, pages in self._table.items():
+            assert len(pages) == self.pages_for(self._len[o]), (o, pages)

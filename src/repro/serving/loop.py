@@ -31,19 +31,34 @@ def run_serving_loop(scheduler: Scheduler, executor: Executor,
     now = 0.0
     n_decode = n_prefill = 0
     gas = idle_gas
+    tracked: List[Task] = []   # delivered, neither finished nor dropped yet
 
     def deliver_arrivals(upto: float) -> None:
         nonlocal i
         while i < len(arrivals) and arrivals[i].arrival_ms <= upto:
             scheduler.on_arrival(arrivals[i], now=max(now, arrivals[i].arrival_ms))
+            tracked.append(arrivals[i])
             i += 1
+
+    def release_dropped() -> None:
+        # dropped tasks never reach the finish path below, so their KV
+        # (slots or pages) must be reclaimed here or it leaks for the rest
+        # of the run — and memory-aware admission would over-promise.
+        still = []
+        for t in tracked:
+            if t.dropped:
+                executor.release(t)
+            elif not t.finished:
+                still.append(t)
+        tracked[:] = still
 
     deliver_arrivals(0.0)
     while now < max_ms:
         gas -= 1
         if gas <= 0:
             raise RuntimeError("serving loop did not converge")
-        action = scheduler.next_action(now)
+        action = scheduler.next_action(now)   # may drop tasks (reschedule)
+        release_dropped()
         if action is None:
             if i < len(arrivals):            # idle -> jump to next arrival
                 now = max(now, arrivals[i].arrival_ms)

@@ -1,8 +1,14 @@
-"""Property-based tests (hypothesis) for SLICE's invariants."""
+"""Property-based tests (hypothesis) for SLICE's invariants.
+
+Skipped wholesale when hypothesis is not installed (it is an optional
+[test] extra, see pyproject.toml) so tier-1 collection works from a clean
+checkout."""
 import math
 
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.latency_model import MeasuredLatencyModel, paper_fig1_model
