@@ -16,12 +16,13 @@ def main() -> None:
                     help="skip real-JAX-engine measurements (faster)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: "
-                         "fig1,table2,fig7,fig10,fig11,kv")
+                         "fig1,table2,fig7,fig10,fig11,kv,prefill")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import (dynamic_slo, kv_pressure, latency_vs_batch,
-                            ratio_sweep, static_tpot, workload_sweep)
+                            prefill_interference, ratio_sweep, static_tpot,
+                            workload_sweep)
 
     print("name,value,derived")
     t0 = time.time()
@@ -37,6 +38,8 @@ def main() -> None:
         workload_sweep.run()
     if only is None or "kv" in only:
         kv_pressure.run(engine=not args.skip_engine)
+    if only is None or "prefill" in only:
+        prefill_interference.run(engine=not args.skip_engine)
     print(f"total_wall_s,{time.time() - t0:.1f},", flush=True)
 
 

@@ -20,13 +20,22 @@ from repro.core.mask_matrix import (build_mask_matrix, column_batches,
                                     mask_matrix_period_ms, quantized_rate,
                                     stagger_columns)
 from repro.core.selection import (PERIOD_BUDGET_MS, PageBudget,
-                                  task_selection)
+                                  prefill_chunk_budget, task_selection)
 from repro.core.task import Task
 
 
 @dataclasses.dataclass
 class PrefillAction:
     task: Task
+
+
+@dataclasses.dataclass
+class PrefillChunkAction:
+    """Process the next n_tokens of a task's prompt (DESIGN.md §5): chunked
+    prefill interleaves these with decode columns so long prompts never
+    stall admitted decode streams for a whole atomic prefill."""
+    task: Task
+    n_tokens: int
 
 
 @dataclasses.dataclass
@@ -66,9 +75,19 @@ class SliceScheduler(Scheduler):
                  utility_adaptor: Optional[Callable[[Sequence[Task]], None]] = None,
                  drop_expired_realtime: bool = True,
                  stagger: bool = False, prefill_headroom: bool = True,
-                 page_budget: Optional[PageBudget] = None):
+                 page_budget: Optional[PageBudget] = None,
+                 prefill_chunk: Optional[int] = None):
         self.lat = lat
         self.budget_ms = budget_ms
+        # Chunked prefill (DESIGN.md §5): when set, prefills are dispatched
+        # as PrefillChunkAction slices of at most this many tokens,
+        # interleaved with decode columns under a per-cycle token budget
+        # derived from the Eq. 7 headroom (selection.prefill_chunk_budget) —
+        # instead of atomically ahead of all decoding.
+        self.prefill_chunk = prefill_chunk
+        self._chunk_budget_tokens = 0
+        self._chunk_spent_tokens = 0
+        self._chunk_turn = True
         # Memory-aware admission (DESIGN.md §3 adaptation #2): when serving a
         # paged executor, selection reserves each task's peak KV pages and
         # DEFERS tasks that do not fit — the utility ordering decides who gets
@@ -134,7 +153,9 @@ class SliceScheduler(Scheduler):
             remaining_ms = t.slo.deadline_ms - (now - t.arrival_ms)
             need_ms = (t.output_len - t.tokens_done) * t.slo.tpot_ms
             if t.tokens_done == 0:
-                need_ms += self.lat.prefill_ms(t.prompt_len)
+                # chunked prefill: only the not-yet-cached prompt tail costs
+                need_ms += self.lat.prefill_ms(
+                    max(0, t.prompt_len - t.prefill_done_tokens))
             if need_ms > remaining_ms:
                 t.dropped = True
         self.pool = [t for t in self.pool if not t.dropped]
@@ -165,6 +186,14 @@ class SliceScheduler(Scheduler):
         self._build_mask(remaining=True)
         self.prefill_queue = [t for t in self.batch if t.prefill_done_ms is None]
         self.prefill_queue.sort(key=lambda t: -t.effective_utility)
+        if self.prefill_chunk is not None:
+            # recompute the cycle's chunk budget for the new batch; spent
+            # tokens carry across reschedules (same credit philosophy as
+            # ``delivered``) and reset only at a fresh cycle.
+            rates = sorted((quantized_rate(t.slo.tpot_ms) for t in self.batch),
+                           reverse=True)
+            self._chunk_budget_tokens = prefill_chunk_budget(
+                rates, self.lat, self.budget_ms, self.prefill_chunk)
         self.need_resched = False
 
     def _build_mask(self, remaining: bool) -> None:
@@ -189,21 +218,19 @@ class SliceScheduler(Scheduler):
 
     def _new_cycle(self) -> None:
         self.delivered = {}
+        self._chunk_spent_tokens = 0
         self._build_mask(remaining=False)
 
-    def next_action(self, now: float):
-        if self.need_resched:
-            self._reschedule(now)
-        if self.prefill_queue:
-            return PrefillAction(self.prefill_queue.pop(0))
+    def _next_decode_action(self):
+        """Column scan (Alg. 3 lines 12-33); scanning past the last column
+        completes the cycle and rebuilds the full-quota matrix. Tasks still
+        mid-prefill (chunked mode) are skipped — they have no KV yet."""
         if not self.batch:
             return None
         if self.mask is None:       # all quotas consumed -> next cycle
             self._new_cycle()
         if self.mask is None:
             return None
-        # column scan (Alg. 3 lines 12-33); scanning past the last column
-        # completes the cycle and rebuilds the full-quota matrix.
         for _ in range(self.mask.shape[1] + 1):
             if self.col >= self.mask.shape[1]:
                 self._new_cycle()
@@ -211,11 +238,50 @@ class SliceScheduler(Scheduler):
                     return None
             rows = np.nonzero(self.mask[:, self.col])[0]
             self.col += 1
-            tasks = [self.batch[r] for r in rows if not self.batch[r].finished]
+            tasks = [self.batch[r] for r in rows
+                     if not self.batch[r].finished
+                     and self.batch[r].prefill_done_ms is not None]
             if tasks:
                 for t in tasks:
                     self.delivered[t.task_id] = self.delivered.get(t.task_id, 0) + 1
                 return DecodeAction(tasks)
+        return None
+
+    def _prune_prefill_queue(self) -> None:
+        self.prefill_queue = [t for t in self.prefill_queue
+                              if t.prefill_done_ms is None and not t.dropped]
+
+    def _make_chunk_action(self) -> PrefillChunkAction:
+        t = self.prefill_queue[0]
+        remaining = max(1, t.prompt_len - t.prefill_done_tokens)
+        n = min(self.prefill_chunk, remaining)
+        self._chunk_spent_tokens += n
+        return PrefillChunkAction(t, n)
+
+    def next_action(self, now: float):
+        if self.need_resched:
+            self._reschedule(now)
+        if self.prefill_chunk is None:
+            # atomic prefill: drain the whole queue ahead of any decode —
+            # the head-of-line blocking mode chunked prefill exists to avoid
+            if self.prefill_queue:
+                return PrefillAction(self.prefill_queue.pop(0))
+            return self._next_decode_action()
+        # chunked prefill: alternate chunks with decode columns while the
+        # Eq. 7 headroom budget lasts; an idle engine prefills regardless
+        # (unclaimed slack costs nothing).
+        self._prune_prefill_queue()
+        want_chunk = bool(self.prefill_queue)
+        have_budget = self._chunk_spent_tokens < self._chunk_budget_tokens
+        if want_chunk and have_budget and self._chunk_turn:
+            self._chunk_turn = False
+            return self._make_chunk_action()
+        act = self._next_decode_action()
+        if act is not None:
+            self._chunk_turn = True
+            return act
+        if want_chunk:
+            return self._make_chunk_action()
         return None
 
     def unfinished(self) -> int:

@@ -110,6 +110,26 @@ def task_selection(tasks: Sequence[Task], lat: LatencyModel,
     return selected, deferred
 
 
+def prefill_chunk_budget(rates_desc: Sequence[int], lat: LatencyModel,
+                         budget_ms: float, chunk_len: int) -> int:
+    """Eq. 7 headroom → prefill-chunk token budget for one cycle
+    (DESIGN.md §5).
+
+    The decode-mask matrix consumes ``estimate_period_ms(rates)`` of the
+    cycle; the remainder is slack that interleaved prefill chunks may fill
+    without pushing the *delivered* cycle past budget. Tokens are priced at
+    the chunk granularity (``prefill_ms(chunk_len) / chunk_len``) so the
+    per-chunk launch overhead is amortized at the size actually dispatched.
+    """
+    slack_ms = budget_ms - estimate_period_ms(rates_desc, lat)
+    if slack_ms <= 0.0:
+        return 0
+    per_chunk_ms = lat.prefill_ms(chunk_len)
+    if per_chunk_ms <= 0.0:
+        return 10 ** 9
+    return int(slack_ms * chunk_len / per_chunk_ms)
+
+
 def selection_feasible(selected: Sequence[Task], lat: LatencyModel,
                        budget_ms: float = PERIOD_BUDGET_MS) -> bool:
     rates = sorted((quantized_rate(t.slo.tpot_ms) for t in selected),

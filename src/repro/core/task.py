@@ -48,6 +48,7 @@ class Task:
 
     # runtime accounting (filled by the serving loop)
     prefill_done_ms: Optional[float] = None
+    prefill_done_tokens: int = 0       # prompt tokens cached (chunked prefill)
     token_times_ms: list = dataclasses.field(default_factory=list)
     dropped: bool = False
 

@@ -3,7 +3,7 @@
 tasks, arrival rates 0.1-7.0 tasks/s, configurable RT:non-RT ratio."""
 from __future__ import annotations
 
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -15,33 +15,46 @@ def poisson_workload(rate_per_s: float, duration_s: float,
                      rt_utility: float = 50.0, nrt_utility: float = 1.0,
                      rt_output_len: int = 12,
                      voice_output_len: int = 256,
-                     qa_output_len: int = 288) -> List[Task]:
+                     qa_output_len: int = 288,
+                     rt_prompt: Tuple[int, int] = (32, 96),
+                     voice_prompt: Tuple[int, int] = (64, 192),
+                     qa_prompt: Tuple[int, int] = (128, 384)) -> List[Task]:
     """RT tasks are short control bursts; non-RT voice/QA run longer
     (the paper: 'real-time tasks typically consist of short-duration
-    operations ... non-real-time tasks feature longer execution cycles')."""
+    operations ... non-real-time tasks feature longer execution cycles').
+
+    The prompt-length ranges are overridable so sweeps can shape the mix
+    (e.g. the long-prompt regime of benchmarks/prefill_interference.py).
+    """
     rng = np.random.default_rng(seed)
     t_ms = 0.0
     tasks: List[Task] = []
+    # Non-RT splits voice:qa 50:50. Kind comes from ONE categorical draw and
+    # every branch consumes the same number of rng draws, so the arrival
+    # process and per-task attribute streams are identical across
+    # realtime_frac values at a fixed seed (comparable sweeps).
+    voice_cut = realtime_frac + (1.0 - realtime_frac) / 2.0
     while True:
         t_ms += rng.exponential(1000.0 / rate_per_s)
         if t_ms > duration_s * 1000.0:
             break
-        if rng.random() < realtime_frac:
+        r = rng.random()
+        if r < realtime_frac:
             tasks.append(control_task(
                 arrival_ms=t_ms,
-                prompt_len=int(rng.integers(32, 96)),
+                prompt_len=int(rng.integers(*rt_prompt)),
                 output_len=max(6, int(rng.normal(rt_output_len, 2))),
                 utility=rt_utility))
-        elif rng.random() < 0.5:
+        elif r < voice_cut:
             tasks.append(voice_task(
                 arrival_ms=t_ms,
-                prompt_len=int(rng.integers(64, 192)),
+                prompt_len=int(rng.integers(*voice_prompt)),
                 output_len=max(16, int(rng.normal(voice_output_len, 16))),
                 utility=nrt_utility))
         else:
             tasks.append(qa_task(
                 arrival_ms=t_ms,
-                prompt_len=int(rng.integers(128, 384)),
+                prompt_len=int(rng.integers(*qa_prompt)),
                 output_len=max(16, int(rng.normal(qa_output_len, 32))),
                 utility=nrt_utility))
     return tasks

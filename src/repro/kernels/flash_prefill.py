@@ -1,11 +1,16 @@
-"""Pallas TPU kernel: blockwise causal / sliding-window flash attention
-(prefill path).
+"""Pallas TPU kernels: blockwise causal / sliding-window flash attention
+(prefill path), monolithic and chunked.
 
 Grid: (B, Hkv, nq, nk) with the KV axis innermost; online-softmax state in
 VMEM scratch, finalized on the last KV block. Each step contracts a
 [g*qblk, hd] x [hd, kblk] MXU matmul. Band masking is positional, so the
 same kernel serves full-causal, sliding-window and (causal=False)
 encoder attention.
+
+``flash_prefill_chunk_kernel`` is the chunked-prefill variant (DESIGN.md
+§5): queries are one prompt chunk at absolute positions ``q_start + i``
+while KV spans the whole buffer written so far — ``q_start`` rides in as a
+scalar-prefetch operand so one compilation serves every chunk offset.
 """
 from __future__ import annotations
 
@@ -99,3 +104,102 @@ def flash_prefill_kernel(q, k, v, causal=True, window=None,
         interpret=interpret,
     )(qt, kt, vt)
     return out.transpose(0, 3, 1, 2, 4).reshape(B, S, Hq, hd)
+
+
+# ------------------------------------------------------------ chunked prefill
+
+def _chunk_kernel(qstart_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                  acc_ref, *, causal, window, scale, qblk, kblk, g):
+    b = pl.program_id(0)
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32).reshape(g * qblk, -1)   # [g*qblk, hd]
+    k = k_ref[0, 0].astype(jnp.float32)                         # [kblk, hd]
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    # absolute positions: query row r of the [g*qblk] flattening is
+    # (head g, chunk-local qi*qblk + r % qblk), offset by the chunk start
+    q_pos = (qstart_ref[b] + qi * qblk
+             + jax.lax.broadcasted_iota(jnp.int32, (g * qblk, kblk), 0) % qblk)
+    k_pos = kj * kblk + jax.lax.broadcasted_iota(jnp.int32, (g * qblk, kblk), 1)
+    d = q_pos - k_pos
+    keep = jnp.ones_like(d, dtype=jnp.bool_)
+    if causal:
+        keep &= d >= 0
+    if window is not None:
+        keep &= d < window
+
+    s = jnp.where(keep, s, NEG_INF)
+    m_prev = m_ref[:, :1]
+    l_prev = l_ref[:, :1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    p = jnp.where(keep, p, 0.0)   # guard fully-masked blocks (m_new=-inf)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = jnp.broadcast_to(l_prev * corr + jnp.sum(p, -1, keepdims=True),
+                                  l_ref.shape)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+
+    @pl.when(kj == nk - 1)
+    def _fin():
+        o = acc_ref[...] / jnp.maximum(l_ref[:, :1], 1e-30)
+        o_ref[0, 0] = o.reshape(g, qblk, -1).astype(o_ref.dtype)
+
+
+def flash_prefill_chunk_kernel(q, k, v, q_start, causal=True, window=None,
+                               qblk: int = 128, kblk: int = 128,
+                               interpret: bool = False):
+    """Chunked prefill: q is ONE prompt chunk, KV is the whole buffer so far.
+
+    q: [B,C,Hq,hd] — chunk queries, RoPE'd at absolute positions
+    ``q_start[b] + i``; k/v: [B,S,Hkv,hd] — the KV buffer, holding the
+    sequence's tokens at positions 0..q_start+C-1 (the chunk's own KV
+    included; anything beyond is causally masked, so a fixed-size engine
+    buffer with stale tail data is safe to pass). q_start: [B] int32,
+    scalar-prefetched — one compilation serves every chunk offset.
+    Returns [B,C,Hq,hd]. C must divide by qblk, S by kblk.
+    """
+    B, C, Hq, hd = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    assert C % qblk == 0 and S % kblk == 0
+    qt = q.reshape(B, C, Hkv, g, hd).transpose(0, 2, 3, 1, 4)  # [B,Hkv,g,C,hd]
+    kt = k.transpose(0, 2, 1, 3)                               # [B,Hkv,S,hd]
+    vt = v.transpose(0, 2, 1, 3)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Hkv, C // qblk, S // kblk),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, qblk, hd),
+                         lambda b, h, i, j, qs: (b, h, 0, i, 0)),
+            pl.BlockSpec((1, 1, kblk, hd), lambda b, h, i, j, qs: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, kblk, hd), lambda b, h, i, j, qs: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, qblk, hd),
+                               lambda b, h, i, j, qs: (b, h, 0, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g * qblk, 128), jnp.float32),
+            pltpu.VMEM((g * qblk, 128), jnp.float32),
+            pltpu.VMEM((g * qblk, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_chunk_kernel, causal=causal, window=window,
+                          scale=hd ** -0.5, qblk=qblk, kblk=kblk, g=g),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, g, C, hd), q.dtype),
+        interpret=interpret,
+    )(q_start.astype(jnp.int32), qt, kt, vt)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, C, Hq, hd)

@@ -63,6 +63,23 @@ def flash_prefill(q, k, v, *, causal: bool = True, window=None,
                                     interpret=_auto_interpret(interpret))
 
 
+@functools.partial(jax.jit, static_argnames=("causal", "window", "qblk",
+                                             "kblk", "interpret"))
+def flash_prefill_chunk(q, k, v, q_start, *, causal: bool = True, window=None,
+                        qblk: int = 128, kblk: int = 128,
+                        interpret: Optional[bool] = None):
+    """Chunked prefill: q [B,C,Hq,hd] at positions q_start[b]+i over the
+    full KV buffer k/v [B,S,Hkv,hd] (stale tail data beyond the chunk end is
+    causally masked). One compilation per (C, S) shape pair serves every
+    chunk offset — q_start is scalar-prefetched data, not shape."""
+    C, S = q.shape[1], k.shape[1]
+    qblk, kblk = min(qblk, C), min(kblk, S)
+    assert C % qblk == 0 and S % kblk == 0, "pad chunk/buffer to block multiple"
+    return _fp.flash_prefill_chunk_kernel(q, k, v, q_start, causal=causal,
+                                          window=window, qblk=qblk, kblk=kblk,
+                                          interpret=_auto_interpret(interpret))
+
+
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def ssd_scan(x, dt, a_log, b, c, d_skip, dt_bias, *, chunk: int = 64,
              interpret: Optional[bool] = None):

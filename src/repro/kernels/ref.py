@@ -31,6 +31,18 @@ def flash_prefill_ref(q, k, v, causal=True, window=None):
     return attention(q, k, v, mask)
 
 
+def flash_prefill_chunk_ref(q, k, v, q_start, causal=True, window=None):
+    """Same contract as kernels.flash_prefill.flash_prefill_chunk_kernel:
+    chunk queries at absolute positions q_start[b]+i over the whole KV
+    buffer (positions 0..S-1)."""
+    B, C = q.shape[:2]
+    S = k.shape[1]
+    q_pos = q_start[:, None] + jnp.arange(C)[None, :]       # [B, C]
+    k_pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    mask = band_mask(q_pos, k_pos, causal, window)          # [B, C, S]
+    return attention(q, k, v, mask)
+
+
 def ssd_scan_ref(x, dt, a_log, b, c, d_skip, dt_bias, chunk: int = 64):
     """Same contract as kernels.ssd_scan.ssd_scan_kernel."""
     return ssd_chunked(x, dt, a_log, b, c, d_skip, dt_bias, chunk=chunk)

@@ -10,6 +10,10 @@ mesh (see dryrun.py for the lowering proof).
   # paged KV arena + memory-aware SLICE admission (DESIGN.md §3 adapt. #2):
   PYTHONPATH=src python -m repro.launch.serve --executor paged \
       --pages 64 --page-size 16
+
+  # chunked prefill (DESIGN.md §5): slice prompts into 32-token chunks
+  # co-scheduled with decode under the Eq. 7 headroom budget
+  PYTHONPATH=src python -m repro.launch.serve --prefill-chunk 32
 """
 from __future__ import annotations
 
@@ -35,6 +39,10 @@ def main():
     ap.add_argument("--paged-kernel", action="store_true",
                     help="paged executor: use the Pallas scalar-prefetch "
                          "kernel instead of the jnp gather")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked prefill (SLICE only): max prompt tokens "
+                         "per chunk, interleaved with decode columns under "
+                         "the Eq. 7 headroom budget (default: atomic)")
     ap.add_argument("--reduced", action="store_true", default=True,
                     help="use the reduced (CPU-feasible) config")
     ap.add_argument("--seed", type=int, default=0)
@@ -54,6 +62,12 @@ def main():
     if cfg.is_encoder_only:
         raise SystemExit(f"{args.arch} is encoder-only: no decode serving "
                          "(DESIGN.md §4)")
+    if args.prefill_chunk is not None and args.scheduler != "slice":
+        raise SystemExit("--prefill-chunk requires --scheduler slice "
+                         "(Orca/FastServe are atomic-prefill baselines)")
+    if args.prefill_chunk is not None and (not cfg.has_attention or cfg.has_ssm):
+        raise SystemExit(f"{args.arch}: chunked prefill needs a "
+                         "pure-attention arch (DESIGN.md §5)")
     page_budget = None
     n_pages = args.pages or (args.slots * args.max_seq) // args.page_size
     if args.executor == "paged":
@@ -61,11 +75,13 @@ def main():
                               page_size=args.page_size,
                               max_seq=args.max_seq, seed=args.seed,
                               max_batch=args.slots,
-                              use_paged_kernel=args.paged_kernel)
+                              use_paged_kernel=args.paged_kernel,
+                              prefill_chunk_size=args.prefill_chunk)
         page_budget = ex.page_budget()
     else:
         ex = JaxExecutor(cfg, max_slots=args.slots, max_seq=args.max_seq,
-                         seed=args.seed)
+                         seed=args.seed,
+                         prefill_chunk_size=args.prefill_chunk)
     lat = ex.latency_model()
     print(f"engine {cfg.name} ({args.executor}): l(1)={lat.decode_ms(1):.2f}ms "
           f"l({args.slots})={lat.decode_ms(args.slots):.2f}ms")
@@ -92,7 +108,8 @@ def main():
         peak = args.max_seq // 4 + args.max_seq // 2
         baseline_batch = max(1, min(args.slots,
                                     (n_pages * args.page_size) // peak))
-    sched = {"slice": lambda: SliceScheduler(lat, page_budget=page_budget),
+    sched = {"slice": lambda: SliceScheduler(lat, page_budget=page_budget,
+                                             prefill_chunk=args.prefill_chunk),
              "orca": lambda: OrcaScheduler(max_batch=baseline_batch),
              "fastserve": lambda: FastServeScheduler(max_batch=baseline_batch),
              }[args.scheduler]()
@@ -100,7 +117,8 @@ def main():
     s = summarize(res.tasks)
     print(f"{args.scheduler}: n={s['all'].n} SLO={s['all'].slo:.1%} "
           f"RT={s['realtime'].slo:.1%} nRT={s['non_realtime'].slo:.1%} "
-          f"decode_iters={res.decode_iterations}")
+          f"decode_iters={res.decode_iterations} "
+          f"prefill_chunks={res.prefill_chunks}")
 
 
 if __name__ == "__main__":

@@ -164,6 +164,25 @@ def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
     return out.reshape(B, Hq, hd)
 
 
+def chunk_decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                           v_cache: jnp.ndarray, kv_pos: jnp.ndarray,
+                           q_pos: jnp.ndarray,
+                           window: Optional[int] = None) -> jnp.ndarray:
+    """Prompt-chunk attention over a KV cache buffer: the multi-query-token
+    generalization of ``decode_attention`` (and the jnp oracle of the Pallas
+    ``flash_prefill_chunk_kernel``).
+
+    q: [B,C,Hq,hd] — one prompt chunk, RoPE'd at absolute positions
+    q_pos [B,C]; k/v_cache: [B,Hkv,Sbuf,hd] with the chunk's own KV already
+    written; kv_pos: [B,Sbuf] absolute position per slot, -1 = empty.
+    """
+    d = q_pos[:, :, None] - kv_pos[:, None, :]          # [B,C,Sbuf]
+    keep = (kv_pos[:, None, :] >= 0) & (d >= 0)
+    if window is not None:
+        keep &= d < window
+    return attention(q, k_cache.swapaxes(1, 2), v_cache.swapaxes(1, 2), keep)
+
+
 def gather_pages(pages: jnp.ndarray, page_table: jnp.ndarray) -> jnp.ndarray:
     """pages: [P,Hkv,psz,hd]; page_table: [B,maxp] (-1 = unused, gathered as
     page 0 and masked by the caller via kv positions).

@@ -296,6 +296,127 @@ def prefill(cfg: ArchConfig, params: Params, inputs: jnp.ndarray,
     return unembed(cfg, params, x[:, -1]), out
 
 
+# ---------------------------------------------------------- chunked prefill
+
+def prefill_chunk(cfg: ArchConfig, params: Params, cache: Cache,
+                  tokens: jnp.ndarray, opts: ModelOptions = ModelOptions(),
+                  use_kernel: bool = False) -> Tuple[jnp.ndarray, Cache]:
+    """Process ONE prompt chunk against a slot-style cache (DESIGN.md §5).
+
+    tokens: [B,C] — the next C prompt tokens of every row, appended at each
+    row's current ``cache['length']``. The chunk's KV is written into the
+    buffer and its queries attend over everything cached so far (kv_pos
+    masking, or the Pallas chunk kernel with ``use_kernel=True`` — safe
+    because the buffer is append-only, so positions beyond the chunk end are
+    causally masked). Returns (logits of the chunk's last position [B,V],
+    new cache). Caller guarantees length+C <= buf_len (no ring wrap).
+
+    Restrictions: attention archs without SSM state (chunk-carry of the
+    recurrent state is not implemented), and exact logit-equivalence with
+    monolithic ``prefill`` holds for dense-FFN blocks (MoE capacity is
+    sequence-length dependent).
+    """
+    assert cfg.causal and cfg.has_attention and not cfg.has_ssm
+    B, C = tokens.shape
+    x = params["embed"][tokens]                    # [B,C,D]
+    length = cache["length"]                       # [B]
+    q_pos = length[:, None] + jnp.arange(C, dtype=length.dtype)  # [B,C]
+    buf_len = cache["k"].shape[3]
+    window = None
+    if cfg.sliding_window and buf_len <= cfg.sliding_window:
+        window = cfg.sliding_window
+    slot = q_pos                                   # append-only: no ring wrap
+    barr = jnp.arange(B)[:, None]
+    new_kv_pos = cache["kv_pos"].at[barr, slot].set(q_pos)
+    new_cache: Cache = {"length": length + C, "kv_pos": new_kv_pos}
+
+    def body(x, xs):
+        bp, lc = xs
+        h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
+        q = (h @ bp["wq"]).reshape(B, C, cfg.n_heads, cfg.head_dim)
+        k = (h @ bp["wk"]).reshape(B, C, cfg.n_kv_heads, cfg.head_dim)
+        v = (h @ bp["wv"]).reshape(B, C, cfg.n_kv_heads, cfg.head_dim)
+        q = shard(L.apply_rope(q, q_pos, cfg.rope_theta), ("b", None, "m", None))
+        k = L.apply_rope(k, q_pos, cfg.rope_theta)
+        kc = lc["k"].at[barr, :, slot].set(k)      # [B,Hkv,buf,hd]
+        vc = lc["v"].at[barr, :, slot].set(v)
+        if use_kernel:
+            from repro.kernels import ops as _kops
+            a = _kops.flash_prefill_chunk(q, kc.swapaxes(1, 2),
+                                          vc.swapaxes(1, 2), length,
+                                          window=window)
+        else:
+            a = L.chunk_decode_attention(q, kc, vc, new_kv_pos, q_pos, window)
+        x = x + a.reshape(B, C, cfg.q_dim) @ bp["wo"]
+        f_out, _ = _ffn(cfg, bp, x, opts.moe_impl)
+        return x + f_out, {"k": kc, "v": vc}
+
+    layer_caches = {"k": cache["k"], "v": cache["v"]}
+    x, new_layer_caches = jax.lax.scan(body, x, (params["blocks"], layer_caches),
+                                       unroll=opts.unroll)
+    new_cache.update(new_layer_caches)
+    return unembed(cfg, params, x[:, -1]), new_cache
+
+
+def prefill_chunk_paged(cfg: ArchConfig, params: Params, pages: Cache,
+                        page_table: jnp.ndarray, lengths: jnp.ndarray,
+                        tokens: jnp.ndarray,
+                        opts: ModelOptions = ModelOptions(),
+                        use_kernel: bool = False) -> Tuple[jnp.ndarray, Cache]:
+    """Process ONE prompt chunk against the paged KV arena (DESIGN.md §5).
+
+    tokens: [B,C] appended at logical positions ``lengths[b]+i``; the page
+    table must already cover lengths+C tokens (the pool extends BEFORE the
+    chunk — incremental allocation, not a peak reservation). The chunk's KV
+    is scattered into its pages, then its queries attend over the gathered
+    page view (kv-position masking, or the Pallas chunk kernel — untabled
+    entries sit at logical positions beyond the chunk end, so causal masking
+    covers them). Returns (logits of the chunk's last position [B,V], new
+    pages). Lengths/page tables are host-side pool state — caller advances.
+    """
+    assert cfg.causal and cfg.has_attention and not cfg.has_ssm
+    B, C = tokens.shape
+    n_pages, psz = pages["k_pages"].shape[1], pages["k_pages"].shape[3]
+    x = params["embed"][tokens]                    # [B,C,D]
+    q_pos = lengths[:, None] + jnp.arange(C, dtype=lengths.dtype)  # [B,C]
+    logical = q_pos // psz
+    off = q_pos % psz
+    barr = jnp.arange(B)[:, None]
+    pt_row = page_table[barr, logical]             # [B,C] phys page per token
+    # out-of-bounds index => scatter dropped (untabled rows)
+    phys = jnp.where(pt_row >= 0, pt_row, n_pages)
+
+    def body(x, xs):
+        bp, lc = xs
+        kp, vp = lc["k"], lc["v"]                  # [P,Hkv,psz,hd]
+        h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
+        q = (h @ bp["wq"]).reshape(B, C, cfg.n_heads, cfg.head_dim)
+        k = (h @ bp["wk"]).reshape(B, C, cfg.n_kv_heads, cfg.head_dim)
+        v = (h @ bp["wv"]).reshape(B, C, cfg.n_kv_heads, cfg.head_dim)
+        q = shard(L.apply_rope(q, q_pos, cfg.rope_theta), ("b", None, "m", None))
+        k = L.apply_rope(k, q_pos, cfg.rope_theta)
+        kp = kp.at[phys, :, off].set(k, mode="drop")
+        vp = vp.at[phys, :, off].set(v, mode="drop")
+        kc = L.gather_pages(kp, page_table)        # [B,Hkv,maxp*psz,hd]
+        vc = L.gather_pages(vp, page_table)
+        if use_kernel:
+            from repro.kernels import ops as _kops
+            a = _kops.flash_prefill_chunk(q, kc.swapaxes(1, 2),
+                                          vc.swapaxes(1, 2), lengths)
+        else:
+            kv_pos = L.paged_kv_positions(page_table, psz)
+            a = L.chunk_decode_attention(q, kc, vc, kv_pos, q_pos)
+        x = x + a.reshape(B, C, cfg.q_dim) @ bp["wo"]
+        f_out, _ = _ffn(cfg, bp, x, opts.moe_impl)
+        return x + f_out, {"k": kp, "v": vp}
+
+    layer_pages = {"k": pages["k_pages"], "v": pages["v_pages"]}
+    x, new_layer_pages = jax.lax.scan(body, x, (params["blocks"], layer_pages),
+                                      unroll=opts.unroll)
+    return unembed(cfg, params, x[:, -1]), {"k_pages": new_layer_pages["k"],
+                                            "v_pages": new_layer_pages["v"]}
+
+
 # ------------------------------------------------------------------ decode
 
 def decode_step(cfg: ArchConfig, params: Params, cache: Cache,

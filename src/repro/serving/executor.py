@@ -14,7 +14,14 @@ PagedJaxExecutor — same engine over a paged KV arena (kv_pool.KVPagePool +
 
 Both JAX executors record ``last_logits`` ([len(tasks), vocab] in task
 order) after every decode — the paged-vs-slot equivalence contract tested
-in tests/test_kv_pool.py.
+in tests/test_kv_pool.py — and ``last_prefill_logits`` after every
+completed prefill (atomic or final chunk), the chunked-vs-monolithic
+contract tested in tests/test_chunked_prefill.py. With
+``prefill_chunk_size`` set, ``prefill_chunk(task, n)`` processes the next
+n prompt tokens through AOT-compiled chunk-size buckets ({chunk} ∪
+{2^k < chunk}, mirroring the pow-2 decode buckets); prompt tokens are a
+deterministic function of (seed, task_id) so the atomic and chunked paths
+see the same prompt.
 """
 from __future__ import annotations
 
@@ -42,6 +49,33 @@ def _pow2_buckets(limit: int):
     yield limit
 
 
+def _chunk_pieces(n: int, chunk: int):
+    """Decompose an n-token prefill request into compiled chunk buckets:
+    full ``chunk``-size pieces plus a power-of-two decomposition of the
+    remainder — so the AOT bucket set {chunk} ∪ {2^k < chunk} covers every
+    request size, mirroring the pow-2 decode buckets."""
+    pieces = []
+    while n > 0:
+        if n >= chunk:
+            pieces.append(chunk)
+            n -= chunk
+        else:
+            p = 1
+            while p * 2 <= n:
+                p *= 2
+            pieces.append(p)
+            n -= p
+    return pieces
+
+
+def _prompt_tokens(seed: int, task_id: int, vocab: int, length: int):
+    """Deterministic per-task prompt tokens, shared by the atomic and chunked
+    prefill paths (and across executors at equal seed) so chunked-vs-
+    monolithic logit equivalence is well-defined."""
+    rng = np.random.default_rng((seed + 1) * 100_003 + task_id)
+    return rng.integers(0, vocab, (1, length))
+
+
 def _probe_latency_curve(executor: "Executor", warm_tasks, probes):
     """Warm min-of-3 decode timings at each probe batch size over tasks the
     caller has already admitted to the engine."""
@@ -58,6 +92,12 @@ class Executor:
     """Returns elapsed milliseconds for each operation."""
 
     def prefill(self, task: Task) -> float:
+        raise NotImplementedError
+
+    def prefill_chunk(self, task: Task, n_tokens: int) -> Tuple[float, bool]:
+        """Process the next ``n_tokens`` of a task's prompt (DESIGN.md §5).
+        Returns (elapsed ms, done) — done=True when the whole (effective)
+        prompt is cached; the FINAL chunk's logits seed the first token."""
         raise NotImplementedError
 
     def decode(self, tasks: Sequence[Task]) -> float:
@@ -77,14 +117,31 @@ class SimExecutor(Executor):
         self.overhead = scheduling_overhead_ms
         self.decode_steps = 0
         self.prefill_steps = 0
+        self.chunk_steps = 0
+        self._chunk_progress: Dict[int, int] = {}
 
     def prefill(self, task: Task) -> float:
         self.prefill_steps += 1
         return self.lat.prefill_ms(task.prompt_len) + self.overhead
 
+    def prefill_chunk(self, task: Task, n_tokens: int) -> Tuple[float, bool]:
+        done = self._chunk_progress.get(task.task_id, 0)
+        n = min(n_tokens, task.prompt_len - done)
+        self.chunk_steps += 1
+        done += n
+        if done >= task.prompt_len:
+            self._chunk_progress.pop(task.task_id, None)
+            self.prefill_steps += 1
+            return self.lat.prefill_ms(n) + self.overhead, True
+        self._chunk_progress[task.task_id] = done
+        return self.lat.prefill_ms(n) + self.overhead, False
+
     def decode(self, tasks: Sequence[Task]) -> float:
         self.decode_steps += 1
         return self.lat.decode_ms(len(tasks)) + self.overhead
+
+    def release(self, task: Task) -> None:
+        self._chunk_progress.pop(task.task_id, None)
 
     def latency_model(self) -> LatencyModel:
         return self.lat
@@ -102,17 +159,25 @@ class JaxExecutor(Executor):
 
     def __init__(self, cfg, params=None, max_slots: int = 16,
                  max_seq: int = 512, seed: int = 0,
-                 compact_buckets: bool = False):
+                 compact_buckets: bool = False,
+                 prefill_chunk_size: Optional[int] = None):
         import jax
         import jax.numpy as jnp
         from repro.models import model as M
+        if prefill_chunk_size is not None and (not cfg.has_attention
+                                               or cfg.has_ssm):
+            raise ValueError("chunked prefill needs a pure-attention arch "
+                             "(SSM chunk-state carry is not implemented); "
+                             "use atomic prefill")
         self.jax, self.jnp, self.M = jax, jnp, M
         self.cfg = cfg
         self.params = params if params is not None else M.init_params(
             cfg, jax.random.PRNGKey(seed))
         self.max_slots = max_slots
         self.max_seq = max_seq
+        self.seed = seed
         self.compact_buckets = compact_buckets
+        self.prefill_chunk_size = prefill_chunk_size
         self.cache = M.init_cache(cfg, max_slots, max_seq)
         self.slot_of: Dict[int, int] = {}
         self.free = list(range(max_slots))
@@ -124,9 +189,73 @@ class JaxExecutor(Executor):
         self._bucket_jit: Dict[int, Any] = {}
         if compact_buckets:
             self._build_bucket_steps()
+        self._chunk_jit: Dict[int, Any] = {}
+        self._chunk_progress: Dict[int, int] = {}
+        if prefill_chunk_size is not None:
+            self._build_chunk_steps()
         self._prefill_jit = {}
-        self._rng = np.random.default_rng(seed)
         self.last_logits: Optional[np.ndarray] = None
+        self.last_prefill_logits: Optional[np.ndarray] = None
+
+    # -- chunked prefill (DESIGN.md §5) --
+    # One compiled step per chunk-size bucket ({chunk} ∪ {2^k < chunk}),
+    # gathering a 1-row sub-cache at the task's slot, appending the chunk at
+    # the row's current length (model.prefill_chunk), and scattering back —
+    # the same gather/scatter trick as bucketed compaction, so chunk offset
+    # is data, not shape, and compile count stays O(log chunk).
+    def _build_chunk_steps(self):
+        jax, jnp, M = self.jax, self.jnp, self.M
+        cfg = self.cfg
+
+        def step(params, cache, toks, idx):
+            sub = {k: cache[k][:, idx] for k in ("k", "v")}
+            sub["length"] = cache["length"][idx]
+            sub["kv_pos"] = cache["kv_pos"][idx]
+            logits, new_sub = M.prefill_chunk(cfg, params, sub, toks)
+            out = dict(cache)
+            for k in ("k", "v"):
+                out[k] = cache[k].at[:, idx].set(new_sub[k])
+            out["length"] = cache["length"].at[idx].set(new_sub["length"])
+            out["kv_pos"] = cache["kv_pos"].at[idx].set(new_sub["kv_pos"])
+            return logits, out
+
+        # _pow2_buckets yields its limit, so this covers every _chunk_pieces
+        # output: {prefill_chunk_size} ∪ {2^k < prefill_chunk_size}
+        for c in sorted(set(_pow2_buckets(self.prefill_chunk_size))):
+            toks = jnp.zeros((1, c), jnp.int32)
+            idx = jnp.zeros((1,), jnp.int32)
+            self._chunk_jit[c] = jax.jit(step).lower(
+                self.params, self.cache, toks, idx).compile()
+
+    def prefill_chunk(self, task: Task, n_tokens: int) -> Tuple[float, bool]:
+        if self.prefill_chunk_size is None:
+            raise RuntimeError("executor built without prefill_chunk_size")
+        jnp = self.jnp
+        s = self._assign_slot(task)
+        L = min(task.prompt_len, self.max_seq // 2)
+        done = self._chunk_progress.get(task.task_id, 0)
+        if done >= L:     # progress kept until release: appending again
+            raise RuntimeError(f"task {task.task_id} already prefilled")
+        n = min(n_tokens, L - done)
+        toks_full = _prompt_tokens(self.seed, task.task_id,
+                                   self.cfg.vocab_size, L)
+        ms = 0.0
+        logits = None
+        for c in _chunk_pieces(n, self.prefill_chunk_size):
+            piece = jnp.asarray(toks_full[:, done:done + c], jnp.int32)
+            idx = jnp.asarray([s], jnp.int32)
+            t0 = time.perf_counter()
+            logits, self.cache = self._chunk_jit[c](
+                self.params, self.cache, piece, idx)
+            logits.block_until_ready()
+            ms += (time.perf_counter() - t0) * 1000.0
+            done += c
+        self._chunk_progress[task.task_id] = done
+        if done >= L:
+            self.last_prefill_logits = np.asarray(logits)
+            self.tokens = self.tokens.at[s].set(int(jnp.argmax(logits[0])))
+            return ms, True
+        return ms, False
 
     # -- bucketed compaction (DESIGN.md §3 adaptation #1) --
     # Masked decode over the full slot array costs l(max_slots) regardless of
@@ -172,6 +301,7 @@ class JaxExecutor(Executor):
         return s
 
     def release(self, task: Task) -> None:
+        self._chunk_progress.pop(task.task_id, None)
         s = self.slot_of.pop(task.task_id, None)
         if s is not None:
             self.free.append(s)
@@ -186,8 +316,8 @@ class JaxExecutor(Executor):
         s = self._assign_slot(task)
         L = min(task.prompt_len, self.max_seq // 2)
         key = (L,)
-        toks = jnp.asarray(self._rng.integers(0, self.cfg.vocab_size, (1, L)),
-                           jnp.int32)
+        toks = jnp.asarray(_prompt_tokens(self.seed, task.task_id,
+                                          self.cfg.vocab_size, L), jnp.int32)
         if key not in self._prefill_jit:
             # AOT-compile so jit tracing/compilation never pollutes the
             # measured latency (it would look like a 1s prefill and trip the
@@ -209,6 +339,7 @@ class JaxExecutor(Executor):
         if "kv_pos" in self.cache:
             self.cache["kv_pos"] = self.cache["kv_pos"].at[s].set(cache1["kv_pos"][0])
         self.cache["length"] = self.cache["length"].at[s].set(cache1["length"][0])
+        self.last_prefill_logits = np.asarray(last)
         self.tokens = self.tokens.at[s].set(int(jnp.argmax(last[0])))
         return ms
 
@@ -290,7 +421,8 @@ class PagedJaxExecutor(Executor):
 
     def __init__(self, cfg, params=None, n_pages: int = 64,
                  page_size: int = 16, max_seq: int = 512, seed: int = 0,
-                 max_batch: int = 16, use_paged_kernel: bool = False):
+                 max_batch: int = 16, use_paged_kernel: bool = False,
+                 prefill_chunk_size: Optional[int] = None):
         import jax
         import jax.numpy as jnp
         from repro.models import model as M
@@ -310,16 +442,22 @@ class PagedJaxExecutor(Executor):
         self.n_pages = n_pages
         self.max_seq = max_seq
         self.max_batch = max_batch
+        self.seed = seed
         self.use_paged_kernel = use_paged_kernel
+        self.prefill_chunk_size = prefill_chunk_size
         self.pool = KVPagePool(n_pages, page_size)
         self.max_pages_per_seq = -(-max_seq // page_size)
         self.pages = M.init_paged_cache(cfg, n_pages, page_size)
         self.last_tok: Dict[int, int] = {}
         self.last_logits: Optional[np.ndarray] = None
+        self.last_prefill_logits: Optional[np.ndarray] = None
         self._step_jit: Dict[int, Any] = {}
         self._build_steps()
+        self._chunk_jit: Dict[int, Any] = {}
+        self._chunk_progress: Dict[int, int] = {}
+        if prefill_chunk_size is not None:
+            self._build_chunk_steps()
         self._prefill_jit: Dict[Tuple[int, ...], Any] = {}
-        self._rng = np.random.default_rng(seed)
 
     # -- compiled steps (one per power-of-two batch bucket) --
     def _build_steps(self):
@@ -338,6 +476,65 @@ class PagedJaxExecutor(Executor):
             av = jnp.zeros((b,), bool)
             self._step_jit[b] = jax.jit(step).lower(
                 self.params, self.pages, pt, ln, tk, av).compile()
+
+    # -- chunked prefill (DESIGN.md §5): one compiled step per chunk-size
+    # bucket; pages for each chunk are allocated incrementally as the chunk
+    # arrives, never reserved at the prompt's peak up front.
+    def _build_chunk_steps(self):
+        jax, jnp, M = self.jax, self.jnp, self.M
+        cfg, maxp = self.cfg, self.max_pages_per_seq
+
+        def step(params, pages, pt, lengths, toks):
+            return M.prefill_chunk_paged(cfg, params, pages, pt, lengths,
+                                         toks, use_kernel=self.use_paged_kernel)
+
+        # _pow2_buckets yields its limit, so this covers every _chunk_pieces
+        # output: {prefill_chunk_size} ∪ {2^k < prefill_chunk_size}
+        for c in sorted(set(_pow2_buckets(self.prefill_chunk_size))):
+            pt = jnp.full((1, maxp), -1, jnp.int32)
+            ln = jnp.zeros((1,), jnp.int32)
+            toks = jnp.zeros((1, c), jnp.int32)
+            self._chunk_jit[c] = jax.jit(step).lower(
+                self.params, self.pages, pt, ln, toks).compile()
+
+    def prefill_chunk(self, task: Task, n_tokens: int) -> Tuple[float, bool]:
+        if self.prefill_chunk_size is None:
+            raise RuntimeError("executor built without prefill_chunk_size")
+        jnp = self.jnp
+        L = min(task.prompt_len, self.max_seq // 2)
+        done = self._chunk_progress.get(task.task_id, 0)
+        if done >= L or (done == 0 and self.pool.holds(task.task_id)):
+            raise RuntimeError(f"task {task.task_id} already prefilled")
+        n = min(n_tokens, L - done)
+        toks_full = _prompt_tokens(self.seed, task.task_id,
+                                   self.cfg.vocab_size, L)
+        ms = 0.0
+        logits = None
+        for c in _chunk_pieces(n, self.prefill_chunk_size):
+            # incremental allocation: an OutOfPages here propagates with the
+            # pool and progress consistent (progress is advanced per PIECE,
+            # below), so a deferred task resumes from its cached tokens
+            if self.pool.holds(task.task_id):
+                self.pool.extend(task.task_id, done + c)
+            else:
+                self.pool.alloc(task.task_id, c)
+            row = self.pool.page_table(task.task_id)
+            pt = np.full((1, self.max_pages_per_seq), -1, np.int32)
+            pt[0, : len(row)] = row
+            piece = jnp.asarray(toks_full[:, done:done + c], jnp.int32)
+            t0 = time.perf_counter()
+            logits, self.pages = self._chunk_jit[c](
+                self.params, self.pages, jnp.asarray(pt),
+                jnp.asarray([done], jnp.int32), piece)
+            logits.block_until_ready()
+            ms += (time.perf_counter() - t0) * 1000.0
+            done += c
+            self._chunk_progress[task.task_id] = done
+        if done >= L:
+            self.last_prefill_logits = np.asarray(logits)
+            self.last_tok[task.task_id] = int(jnp.argmax(logits[0]))
+            return ms, True
+        return ms, False
 
     def page_budget(self) -> PageBudget:
         """Admission-side view of the pool for SliceScheduler: peak pages per
@@ -359,8 +556,8 @@ class PagedJaxExecutor(Executor):
         if self.pool.holds(task.task_id):
             raise RuntimeError(f"task {task.task_id} already prefilled")
         phys = self.pool.alloc(task.task_id, L)      # OutOfPages -> caller
-        toks = jnp.asarray(self._rng.integers(0, self.cfg.vocab_size, (1, L)),
-                           jnp.int32)
+        toks = jnp.asarray(_prompt_tokens(self.seed, task.task_id,
+                                          self.cfg.vocab_size, L), jnp.int32)
         key = (L,)
         if key not in self._prefill_jit:
             # AOT-compile so jit tracing never pollutes the measured latency
@@ -382,6 +579,7 @@ class PagedJaxExecutor(Executor):
                     .reshape(src.shape[0], src.shape[2], n_alloc, psz, -1)
                     .swapaxes(1, 2))
             self.pages[name] = self.pages[name].at[:, idx].set(view)
+        self.last_prefill_logits = np.asarray(last)
         self.last_tok[task.task_id] = int(jnp.argmax(last[0]))
         return ms
 
@@ -426,6 +624,7 @@ class PagedJaxExecutor(Executor):
     def release(self, task: Task) -> None:
         self.pool.free(task.task_id)
         self.last_tok.pop(task.task_id, None)
+        self._chunk_progress.pop(task.task_id, None)
 
     def latency_model(self) -> LatencyModel:
         """Measure l(b) on the live engine (warm jit) — MeasuredLatencyModel."""

@@ -1,16 +1,19 @@
 """Discrete-event serving loop driving (scheduler, executor) over a workload.
 
-Time semantics: prefill/decode operations are atomic; arrivals landing inside
-an operation are delivered when it completes (iteration-granular interruption,
-matching the paper's implementation). The first output token is emitted at
-prefill completion (standard TTFT convention).
+Time semantics: operations (a whole prefill, one prefill chunk, one decode
+iteration) are atomic; arrivals landing inside an operation are delivered
+when it completes (iteration-granular interruption, matching the paper's
+implementation). The first output token is emitted at prefill completion —
+for chunked prefill (DESIGN.md §5) that is the FINAL chunk's completion, so
+TTFT accounting is identical across atomic and chunked paths.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import List, Optional, Sequence
 
-from repro.core.schedulers import DecodeAction, PrefillAction, Scheduler
+from repro.core.schedulers import (DecodeAction, PrefillAction,
+                                   PrefillChunkAction, Scheduler)
 from repro.core.task import Task
 from repro.serving.executor import Executor
 
@@ -21,6 +24,7 @@ class LoopResult:
     end_ms: float
     decode_iterations: int
     prefills: int
+    prefill_chunks: int = 0
 
 
 def run_serving_loop(scheduler: Scheduler, executor: Executor,
@@ -29,7 +33,7 @@ def run_serving_loop(scheduler: Scheduler, executor: Executor,
     arrivals = sorted(workload, key=lambda t: (t.arrival_ms, t.task_id))
     i = 0
     now = 0.0
-    n_decode = n_prefill = 0
+    n_decode = n_prefill = n_chunks = 0
     gas = idle_gas
     tracked: List[Task] = []   # delivered, neither finished nor dropped yet
 
@@ -69,6 +73,7 @@ def run_serving_loop(scheduler: Scheduler, executor: Executor,
             t = action.task
             ms = executor.prefill(t)
             now += ms
+            t.prefill_done_tokens = t.prompt_len
             t.prefill_done_ms = now
             t.token_times_ms.append(now)     # first token at prefill end
             n_prefill += 1
@@ -77,6 +82,24 @@ def run_serving_loop(scheduler: Scheduler, executor: Executor,
             if t.finished:
                 scheduler.on_finish(t, now)
                 executor.release(t)
+        elif isinstance(action, PrefillChunkAction):
+            t = action.task
+            ms, done = executor.prefill_chunk(t, action.n_tokens)
+            now += ms
+            n_chunks += 1
+            t.prefill_done_tokens = min(t.prompt_len,
+                                        t.prefill_done_tokens + action.n_tokens)
+            if done:
+                # first token at FINAL chunk completion (TTFT convention)
+                t.prefill_done_tokens = t.prompt_len
+                t.prefill_done_ms = now
+                t.token_times_ms.append(now)
+                n_prefill += 1
+                if hasattr(scheduler, "note_prefilled"):
+                    scheduler.note_prefilled(t)
+                if t.finished:
+                    scheduler.on_finish(t, now)
+                    executor.release(t)
         elif isinstance(action, DecodeAction):
             ms = executor.decode(action.tasks)
             now += ms
@@ -88,4 +111,5 @@ def run_serving_loop(scheduler: Scheduler, executor: Executor,
                     executor.release(t)
         deliver_arrivals(now)
     return LoopResult(tasks=list(arrivals), end_ms=now,
-                      decode_iterations=n_decode, prefills=n_prefill)
+                      decode_iterations=n_decode, prefills=n_prefill,
+                      prefill_chunks=n_chunks)
