@@ -2,12 +2,108 @@
 Prints ``name,value,derived`` CSV rows; JSON artifacts land in results/bench/.
 
   PYTHONPATH=src python -m benchmarks.run [--skip-engine]
+
+CI perf-regression gate: compare a tiny-config run against the committed
+baselines (results/bench/baselines/*.json) and fail on regression —
+
+  PYTHONPATH=src python -m benchmarks.run --only prefill,prefix --tiny --check
+
+Gated metrics are sim-side (deterministic per seed) or structural page
+math, never real-engine wall-clock, so the tolerance band guards library
+drift rather than runner speed. Refresh baselines after an intentional
+perf change with --tiny --update-baselines (enforced: baselines are
+recorded at the tiny config CI compares against) and commit the diff.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import shutil
 import sys
 import time
+
+from benchmarks.common import RESULTS_DIR
+
+BASELINE_DIR = os.path.join(RESULTS_DIR, "baselines")
+
+# (benchmark, json key path, direction, relative tolerance).
+# direction "low"  = lower is better (regression when above baseline band)
+#           "high" = higher is better (regression when below baseline band)
+GATES = [
+    ("prefill_interference", ("sim", "atomic", "rt_tpot_p99_ms"), "low", 0.10),
+    ("prefill_interference", ("sim", "chunk=64", "rt_tpot_p99_ms"), "low", 0.10),
+    ("prefill_interference", ("sim", "chunk=64", "rt_gap_p99_ms"), "low", 0.10),
+    ("prefill_interference", ("sim", "chunk=64", "slo"), "high", 0.05),
+    ("prefill_interference", ("sim", "chunk=64", "rt_slo"), "high", 0.05),
+    ("prefix_sharing", ("sim", "unshared/frac=0.9", "slo"), "high", 0.05),
+    ("prefix_sharing", ("sim", "shared/frac=0.9", "slo"), "high", 0.05),
+    ("prefix_sharing", ("sim", "shared/frac=0.9", "rt_slo"), "high", 0.05),
+    ("prefix_sharing", ("engine", "resident_ratio"), "high", 0.0),
+]
+
+
+def _lookup(payload, path):
+    node = payload
+    for part in path:
+        node = node[part]
+    return float(node)
+
+
+def _gated_benches():
+    return sorted({bench for bench, *_ in GATES})
+
+
+def check_baselines(benches=None) -> int:
+    """Compare fresh results/bench JSONs against committed baselines.
+    Returns the number of regressions (0 = pass); prints one row per gate."""
+    failures = 0
+    evaluated = 0
+    print("gate,baseline,current,band,status")
+    for bench, path, direction, tol in GATES:
+        if benches is not None and bench not in benches:
+            continue
+        evaluated += 1
+        cur_file = os.path.join(RESULTS_DIR, f"{bench}.json")
+        base_file = os.path.join(BASELINE_DIR, f"{bench}.json")
+        label = f"{bench}:{'.'.join(path)}"
+        if not os.path.exists(base_file):
+            print(f"{label},MISSING_BASELINE,,,fail")
+            failures += 1
+            continue
+        if not os.path.exists(cur_file):
+            print(f"{label},MISSING_CURRENT_RESULT,,,fail")
+            failures += 1
+            continue
+        with open(cur_file) as f:
+            cur = _lookup(json.load(f), path)
+        with open(base_file) as f:
+            base = _lookup(json.load(f), path)
+        if direction == "low":
+            bound = base * (1.0 + tol) + 1e-9
+            ok = cur <= bound
+            band = f"<={bound:.4g}"
+        else:
+            bound = base * (1.0 - tol) - 1e-9
+            ok = cur >= bound
+            band = f">={bound:.4g}"
+        status = "ok" if ok else "REGRESSION"
+        print(f"{label},{base:.4g},{cur:.4g},{band},{status}")
+        failures += 0 if ok else 1
+    if evaluated == 0:
+        # a gate that checks nothing must not pass: --only drift or a
+        # GATES/bench rename would otherwise silently disable the gate
+        print("NO_GATES_EVALUATED,,,,fail")
+        return 1
+    return failures
+
+
+def update_baselines(benches=None) -> None:
+    os.makedirs(BASELINE_DIR, exist_ok=True)
+    for bench in benches if benches is not None else _gated_benches():
+        src = os.path.join(RESULTS_DIR, f"{bench}.json")
+        shutil.copy(src, os.path.join(BASELINE_DIR, f"{bench}.json"))
+        print(f"baseline updated: {bench}.json")
 
 
 def main() -> None:
@@ -16,13 +112,25 @@ def main() -> None:
                     help="skip real-JAX-engine measurements (faster)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: "
-                         "fig1,table2,fig7,fig10,fig11,kv,prefill")
+                         "fig1,table2,fig7,fig10,fig11,kv,prefill,prefix")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke configs for the benches that have one")
+    ap.add_argument("--check", action="store_true",
+                    help="after running, compare the gated metrics against "
+                         "results/bench/baselines and exit 1 on regression")
+    ap.add_argument("--update-baselines", action="store_true",
+                    help="copy this run's gated JSONs into the baseline dir")
     args = ap.parse_args()
+    if (args.check or args.update_baselines) and not args.tiny:
+        # baselines are tiny-config by contract: comparing (or committing)
+        # full-config numbers against them would trip every band
+        sys.exit("--check/--update-baselines require --tiny "
+                 "(baselines are recorded at the tiny CI config)")
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import (dynamic_slo, kv_pressure, latency_vs_batch,
-                            prefill_interference, ratio_sweep, static_tpot,
-                            workload_sweep)
+                            prefill_interference, prefix_sharing, ratio_sweep,
+                            static_tpot, workload_sweep)
 
     print("name,value,derived")
     t0 = time.time()
@@ -39,8 +147,21 @@ def main() -> None:
     if only is None or "kv" in only:
         kv_pressure.run(engine=not args.skip_engine)
     if only is None or "prefill" in only:
-        prefill_interference.run(engine=not args.skip_engine)
+        prefill_interference.run(tiny=args.tiny,
+                                 engine=not args.skip_engine and not args.tiny)
+    if only is None or "prefix" in only:
+        prefix_sharing.run(tiny=args.tiny, engine=not args.skip_engine)
     print(f"total_wall_s,{time.time() - t0:.1f},", flush=True)
+
+    ran = {"prefill_interference"} if only is None or "prefill" in only else set()
+    if only is None or "prefix" in only:
+        ran.add("prefix_sharing")
+    if args.update_baselines:
+        update_baselines(sorted(ran & set(_gated_benches())))
+    if args.check:
+        failures = check_baselines(sorted(ran & set(_gated_benches())))
+        if failures:
+            sys.exit(f"{failures} benchmark regression(s) vs baseline")
 
 
 if __name__ == "__main__":

@@ -76,9 +76,16 @@ class SliceScheduler(Scheduler):
                  drop_expired_realtime: bool = True,
                  stagger: bool = False, prefill_headroom: bool = True,
                  page_budget: Optional[PageBudget] = None,
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 prefix_hint: Optional[Callable[[Task], int]] = None):
         self.lat = lat
         self.budget_ms = budget_ms
+        # Prefix-cache TTFT credit (DESIGN.md §6): an executor with a radix
+        # prefix cache reports how many prompt tokens of a task are already
+        # resident; deadline-feasibility pricing then charges only the
+        # uncached prompt tail, so a cache-hit real-time task is not dropped
+        # for a prefill it will never pay.
+        self.prefix_hint = prefix_hint
         # Chunked prefill (DESIGN.md §5): when set, prefills are dispatched
         # as PrefillChunkAction slices of at most this many tokens,
         # interleaved with decode columns under a per-cycle token budget
@@ -153,9 +160,13 @@ class SliceScheduler(Scheduler):
             remaining_ms = t.slo.deadline_ms - (now - t.arrival_ms)
             need_ms = (t.output_len - t.tokens_done) * t.slo.tpot_ms
             if t.tokens_done == 0:
-                # chunked prefill: only the not-yet-cached prompt tail costs
+                # chunked prefill / prefix cache: only the not-yet-cached
+                # prompt tail costs
+                cached = t.prefill_done_tokens
+                if self.prefix_hint is not None:
+                    cached = max(cached, int(self.prefix_hint(t)))
                 need_ms += self.lat.prefill_ms(
-                    max(0, t.prompt_len - t.prefill_done_tokens))
+                    max(0, t.prompt_len - cached))
             if need_ms > remaining_ms:
                 t.dropped = True
         self.pool = [t for t in self.pool if not t.dropped]

@@ -31,6 +31,24 @@ class PageBudget:
     The latency model's memory ceiling (latency_model.py:112: decode on big
     hosts is bounded by HBM residency, not per-step latency growth) becomes a
     live constraint here instead of a comment.
+
+    Prefix sharing (DESIGN.md §6) adds two optional callables:
+
+    ``free_pages_now`` — pages available for new allocations RIGHT NOW:
+    the pool's free list plus pages the radix prefix cache could reclaim
+    (pinned by the index only, no running owner). When present, selection
+    charges each admission against this live count instead of the static
+    ``total_pages``-minus-holdings arithmetic.
+
+    ``prefix_pages`` — ``(prefix_key, n_pages)`` for a task: the identity
+    and page count of its shareable page-aligned prompt prefix (key None
+    when it has none). Selection counts each distinct prefix ONCE per
+    round: the first admitted task with a key pays its prefix pages (a
+    fresh compute, or re-pinning reclaimable cached pages — either way
+    they come out of ``free_pages_now``); every later admission with the
+    same key rides the same physical pages for free. That is what lets
+    utility admission see the true headroom of a shared-system-prompt
+    workload and admit more residents.
     """
     total_pages: int
     page_size: int
@@ -38,6 +56,8 @@ class PageBudget:
     seq_cap: Optional[int] = None      # executor's hard per-task token limit
     max_tasks: Optional[int] = None    # executor's compiled max decode batch
     held_pages: Optional[object] = None  # Callable[[Task], int]
+    free_pages_now: Optional[object] = None  # Callable[[], int]
+    prefix_pages: Optional[object] = None    # Callable[[Task], (key, int)]
 
     def peak_tokens(self, task: Task) -> int:
         p = task.prompt_len if self.prompt_cap is None else min(
@@ -49,6 +69,13 @@ class PageBudget:
 
     def held_for(self, task: Task) -> int:
         return int(self.held_pages(task)) if self.held_pages else 0
+
+    def prefix_for(self, task: Task):
+        """(prefix_key, prefix_pages) — (None, 0) without sharing."""
+        if self.prefix_pages is None:
+            return None, 0
+        key, n = self.prefix_pages(task)
+        return key, int(n)
 
     def infeasible(self, task: Task) -> bool:
         """Task can NEVER run on this executor: its peak residency exceeds
@@ -79,24 +106,48 @@ def task_selection(tasks: Sequence[Task], lat: LatencyModel,
     (returned with the pool, admission continues — a smaller task further
     down the utility ordering may still fit), never dropped: memory pressure
     is transient, so the task re-enters selection at the next reschedule.
+
+    With prefix sharing (budget.prefix_pages / free_pages_now, DESIGN.md §6)
+    the pages of a shared prompt prefix are counted ONCE per selection
+    round: the first admitted task of a prefix group pays them, later
+    admissions with the same key reuse the same physical pages for free.
     """
     pool = sorted(tasks, key=lambda t: (-t.utility_rate, t.arrival_ms, t.task_id))
     selected: List[Task] = []
     deferred: List[Task] = []
     rates: List[int] = []
-    # Every candidate's CURRENT holdings are committed up front; admitting a
-    # task upgrades its reservation from held to peak. Tasks that stay
-    # unselected thus still account for the pages they physically occupy.
-    pages_used = (sum(page_budget.held_for(t) for t in pool)
-                  if page_budget is not None else 0)
+    # prefix key -> pages already paid for this round. Group members may
+    # declare different prefix lengths (each capped at its own prompt), so
+    # the discount is min(own prefix, paid so far) and a longer-prefix
+    # member pays the difference — shared blocks are nested per group, so
+    # this is exact whatever order the prefills later run in.
+    prefixes_paid: dict = {}
+    if page_budget is not None and page_budget.free_pages_now is not None:
+        # live accounting: the pool's free count (plus reclaimable cache
+        # pages) already excludes every running task's holdings
+        capacity = int(page_budget.free_pages_now())
+        pages_used = 0
+    elif page_budget is not None:
+        # static accounting: every candidate's CURRENT holdings are
+        # committed up front; admitting a task upgrades its reservation
+        # from held to peak. Tasks that stay unselected thus still account
+        # for the pages they physically occupy.
+        capacity = page_budget.total_pages
+        pages_used = sum(page_budget.held_for(t) for t in pool)
     for i, t in enumerate(pool):
         if page_budget is not None:
             if (page_budget.max_tasks is not None
                     and len(selected) >= page_budget.max_tasks):
                 deferred.append(t)          # engine's compiled batch ceiling
                 continue
-            need = page_budget.pages_for(t) - page_budget.held_for(t)
-            if pages_used + need > page_budget.total_pages:
+            held = page_budget.held_for(t)
+            need = page_budget.pages_for(t) - held
+            key, kp = page_budget.prefix_for(t)
+            if key is not None and held == 0:
+                # shared pages counted once: discount what an earlier
+                # admission this round already paid for this prefix
+                need = max(0, need - min(kp, prefixes_paid.get(key, 0)))
+            if pages_used + need > capacity:
                 deferred.append(t)          # defer, keep scanning
                 continue
         cand = rates + [quantized_rate(t.slo.tpot_ms)]
@@ -107,6 +158,8 @@ def task_selection(tasks: Sequence[Task], lat: LatencyModel,
         rates = cand
         if page_budget is not None:
             pages_used += need
+            if key is not None:
+                prefixes_paid[key] = max(prefixes_paid.get(key, 0), kp)
     return selected, deferred
 
 

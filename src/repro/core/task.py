@@ -46,6 +46,13 @@ class Task:
     task_id: int = dataclasses.field(default_factory=lambda: next(_ids))
     kind: str = "generic"              # control | navigation | voice | qa ...
 
+    # shared-prompt-prefix metadata (DESIGN.md §6): tasks in the same
+    # prefix_group open with the same prefix_len prompt tokens (a shared
+    # system prompt / task template), which the radix prefix cache
+    # deduplicates. None/0 = fully private prompt.
+    prefix_group: Optional[int] = None
+    prefix_len: int = 0
+
     # runtime accounting (filled by the serving loop)
     prefill_done_ms: Optional[float] = None
     prefill_done_tokens: int = 0       # prompt tokens cached (chunked prefill)

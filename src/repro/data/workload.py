@@ -18,15 +18,29 @@ def poisson_workload(rate_per_s: float, duration_s: float,
                      qa_output_len: int = 288,
                      rt_prompt: Tuple[int, int] = (32, 96),
                      voice_prompt: Tuple[int, int] = (64, 192),
-                     qa_prompt: Tuple[int, int] = (128, 384)) -> List[Task]:
+                     qa_prompt: Tuple[int, int] = (128, 384),
+                     shared_prefix_frac: float = 0.0,
+                     prefix_pool: int = 4,
+                     prefix_len_range: Tuple[int, int] = (64, 192)) -> List[Task]:
     """RT tasks are short control bursts; non-RT voice/QA run longer
     (the paper: 'real-time tasks typically consist of short-duration
     operations ... non-real-time tasks feature longer execution cycles').
 
     The prompt-length ranges are overridable so sweeps can shape the mix
     (e.g. the long-prompt regime of benchmarks/prefill_interference.py).
+
+    shared_prefix_frac (DESIGN.md §6): that fraction of tasks opens with a
+    shared system prompt drawn from a deterministic per-seed pool of
+    ``prefix_pool`` prefixes (each with a fixed length from
+    ``prefix_len_range``, capped at the task's own prompt). The draws come
+    from a SEPARATE rng stream, so sweeping the knob changes prefix reuse
+    without perturbing the arrival process or the task attribute stream —
+    runs at different fracs stay comparable task for task.
     """
     rng = np.random.default_rng(seed)
+    prng = np.random.default_rng((seed + 1) * 1_000_003 + 17)
+    pool_lens = [int(prng.integers(*prefix_len_range))
+                 for _ in range(max(prefix_pool, 1))]
     t_ms = 0.0
     tasks: List[Task] = []
     # Non-RT splits voice:qa 50:50. Kind comes from ONE categorical draw and
@@ -57,6 +71,13 @@ def poisson_workload(rate_per_s: float, duration_s: float,
                 prompt_len=int(rng.integers(*qa_prompt)),
                 output_len=max(16, int(rng.normal(qa_output_len, 32))),
                 utility=nrt_utility))
+        # prefix draws always consume the same prng stream, whatever the
+        # frac, so the assignment (not just the arrivals) is sweep-stable
+        u, g = prng.random(), int(prng.integers(len(pool_lens)))
+        if u < shared_prefix_frac:
+            t = tasks[-1]
+            t.prefix_group = g
+            t.prefix_len = min(t.prompt_len, pool_lens[g])
     return tasks
 
 

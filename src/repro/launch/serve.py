@@ -14,6 +14,11 @@ mesh (see dryrun.py for the lowering proof).
   # chunked prefill (DESIGN.md §5): slice prompts into 32-token chunks
   # co-scheduled with decode under the Eq. 7 headroom budget
   PYTHONPATH=src python -m repro.launch.serve --prefill-chunk 32
+
+  # prefix sharing (DESIGN.md §6): dedup shared system prompts in the
+  # paged KV arena via the radix prefix cache
+  PYTHONPATH=src python -m repro.launch.serve --executor paged \
+      --prefix-cache --shared-prefix-frac 0.7
 """
 from __future__ import annotations
 
@@ -43,6 +48,13 @@ def main():
                     help="chunked prefill (SLICE only): max prompt tokens "
                          "per chunk, interleaved with decode columns under "
                          "the Eq. 7 headroom budget (default: atomic)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="paged executor: radix prefix cache — tasks with a "
+                         "common page-aligned prompt prefix share physical "
+                         "KV pages (DESIGN.md §6)")
+    ap.add_argument("--shared-prefix-frac", type=float, default=0.0,
+                    help="fraction of workload tasks opening with a shared "
+                         "system prompt from a per-seed prefix pool")
     ap.add_argument("--reduced", action="store_true", default=True,
                     help="use the reduced (CPU-feasible) config")
     ap.add_argument("--seed", type=int, default=0)
@@ -68,7 +80,11 @@ def main():
     if args.prefill_chunk is not None and (not cfg.has_attention or cfg.has_ssm):
         raise SystemExit(f"{args.arch}: chunked prefill needs a "
                          "pure-attention arch (DESIGN.md §5)")
+    if args.prefix_cache and args.executor != "paged":
+        raise SystemExit("--prefix-cache requires --executor paged "
+                         "(sharing rides on the refcounted page pool)")
     page_budget = None
+    prefix_hint = None
     n_pages = args.pages or (args.slots * args.max_seq) // args.page_size
     if args.executor == "paged":
         ex = PagedJaxExecutor(cfg, n_pages=n_pages,
@@ -76,8 +92,11 @@ def main():
                               max_seq=args.max_seq, seed=args.seed,
                               max_batch=args.slots,
                               use_paged_kernel=args.paged_kernel,
-                              prefill_chunk_size=args.prefill_chunk)
+                              prefill_chunk_size=args.prefill_chunk,
+                              prefix_cache=args.prefix_cache)
         page_budget = ex.page_budget()
+        if args.prefix_cache:
+            prefix_hint = ex.cached_prompt_tokens
     else:
         ex = JaxExecutor(cfg, max_slots=args.slots, max_seq=args.max_seq,
                          seed=args.seed,
@@ -89,13 +108,17 @@ def main():
     scale = max(lat.decode_ms(max(2, args.slots // 2)) / 50.0, 0.02)
     tasks = poisson_workload(args.rate, args.duration, realtime_frac=args.ratio,
                              seed=args.seed, rt_output_len=8,
-                             voice_output_len=24, qa_output_len=32)
+                             voice_output_len=24, qa_output_len=32,
+                             shared_prefix_frac=args.shared_prefix_frac,
+                             prefix_len_range=(args.max_seq // 8,
+                                               args.max_seq // 4))
     for t in tasks:
         t.slo.tpot_ms *= scale
         t.slo.ttft_ms *= max(scale, 1.0)
         if t.slo.deadline_ms:
             t.slo.deadline_ms *= max(scale, 1.0)
         t.prompt_len = min(t.prompt_len, args.max_seq // 4)
+        t.prefix_len = min(t.prefix_len, t.prompt_len)
         # keep every task inside the engine's per-task cap: the paged engine
         # would otherwise drop it as statically infeasible (and the slot
         # engine would silently ring-wrap past max_seq)
@@ -109,7 +132,8 @@ def main():
         baseline_batch = max(1, min(args.slots,
                                     (n_pages * args.page_size) // peak))
     sched = {"slice": lambda: SliceScheduler(lat, page_budget=page_budget,
-                                             prefill_chunk=args.prefill_chunk),
+                                             prefill_chunk=args.prefill_chunk,
+                                             prefix_hint=prefix_hint),
              "orca": lambda: OrcaScheduler(max_batch=baseline_batch),
              "fastserve": lambda: FastServeScheduler(max_batch=baseline_batch),
              }[args.scheduler]()

@@ -20,8 +20,11 @@ contract tested in tests/test_chunked_prefill.py. With
 ``prefill_chunk_size`` set, ``prefill_chunk(task, n)`` processes the next
 n prompt tokens through AOT-compiled chunk-size buckets ({chunk} ∪
 {2^k < chunk}, mirroring the pow-2 decode buckets); prompt tokens are a
-deterministic function of (seed, task_id) so the atomic and chunked paths
-see the same prompt.
+deterministic function of (seed, task) so the atomic and chunked paths
+see the same prompt. With ``prefix_cache=True`` the paged executor dedups
+shared page-aligned prompt prefixes through a radix index + refcounted
+pages (DESIGN.md §6) — prefill skips the cached prefix, decode reads it
+through the shared page tables, logits unchanged.
 """
 from __future__ import annotations
 
@@ -33,7 +36,7 @@ import numpy as np
 from repro.core.latency_model import LatencyModel, MeasuredLatencyModel
 from repro.core.selection import PageBudget
 from repro.core.task import Task
-from repro.serving.kv_pool import KVPagePool
+from repro.serving.kv_pool import KVPagePool, OutOfPages
 
 
 _PREFILL_PRIOR = [(64, 10.0), (512, 40.0)]   # prefill ms prior until measured
@@ -68,12 +71,24 @@ def _chunk_pieces(n: int, chunk: int):
     return pieces
 
 
-def _prompt_tokens(seed: int, task_id: int, vocab: int, length: int):
+def _prompt_tokens(seed: int, task: Task, vocab: int, length: int):
     """Deterministic per-task prompt tokens, shared by the atomic and chunked
     prefill paths (and across executors at equal seed) so chunked-vs-
-    monolithic logit equivalence is well-defined."""
-    rng = np.random.default_rng((seed + 1) * 100_003 + task_id)
-    return rng.integers(0, vocab, (1, length))
+    monolithic logit equivalence is well-defined.
+
+    Tasks carrying shared-prefix metadata (task.prefix_group, DESIGN.md §6)
+    open with tokens drawn from a per-GROUP stream instead of the per-task
+    stream, so two tasks of one group really do share their first
+    prefix_len prompt tokens — the content contract the radix prefix cache
+    deduplicates on."""
+    rng = np.random.default_rng((seed + 1) * 100_003 + task.task_id)
+    toks = rng.integers(0, vocab, (1, length))
+    k = min(getattr(task, "prefix_len", 0) or 0, length)
+    if k > 0 and getattr(task, "prefix_group", None) is not None:
+        grng = np.random.default_rng(
+            (seed + 1) * 7_919 + 1_000_003 * (task.prefix_group + 1))
+        toks[0, :k] = grng.integers(0, vocab, (k,))
+    return toks
 
 
 def _probe_latency_curve(executor: "Executor", warm_tasks, probes):
@@ -237,7 +252,7 @@ class JaxExecutor(Executor):
         if done >= L:     # progress kept until release: appending again
             raise RuntimeError(f"task {task.task_id} already prefilled")
         n = min(n_tokens, L - done)
-        toks_full = _prompt_tokens(self.seed, task.task_id,
+        toks_full = _prompt_tokens(self.seed, task,
                                    self.cfg.vocab_size, L)
         ms = 0.0
         logits = None
@@ -316,7 +331,7 @@ class JaxExecutor(Executor):
         s = self._assign_slot(task)
         L = min(task.prompt_len, self.max_seq // 2)
         key = (L,)
-        toks = jnp.asarray(_prompt_tokens(self.seed, task.task_id,
+        toks = jnp.asarray(_prompt_tokens(self.seed, task,
                                           self.cfg.vocab_size, L), jnp.int32)
         if key not in self._prefill_jit:
             # AOT-compile so jit tracing/compilation never pollutes the
@@ -414,6 +429,13 @@ class PagedJaxExecutor(Executor):
     default) or the Pallas scalar-prefetch kernel (``use_paged_kernel=True``,
     DESIGN.md §3 adaptation #2).
 
+    With ``prefix_cache=True`` a radix index over page-aligned prompt
+    blocks (serving.prefix_cache, DESIGN.md §6) dedups shared prompt
+    prefixes: prefill acquires the cached pages (pool.share) and computes
+    only the uncached suffix; chunked prefill starts at the first uncached
+    chunk; admission (page_budget) counts shared pages once and treats
+    idle cached pages as reclaimable headroom (evicted on pressure).
+
     Restrictions: attention-only archs (SSM state is O(1)/task — nothing to
     page), and sequences are hard-capped at max_seq (the paged cache is
     append-only; it never ring-wraps like the slot path's long-context mode).
@@ -422,7 +444,9 @@ class PagedJaxExecutor(Executor):
     def __init__(self, cfg, params=None, n_pages: int = 64,
                  page_size: int = 16, max_seq: int = 512, seed: int = 0,
                  max_batch: int = 16, use_paged_kernel: bool = False,
-                 prefill_chunk_size: Optional[int] = None):
+                 prefill_chunk_size: Optional[int] = None,
+                 prefix_cache: bool = False,
+                 prefix_cache_pages: Optional[int] = None):
         import jax
         import jax.numpy as jnp
         from repro.models import model as M
@@ -446,6 +470,13 @@ class PagedJaxExecutor(Executor):
         self.use_paged_kernel = use_paged_kernel
         self.prefill_chunk_size = prefill_chunk_size
         self.pool = KVPagePool(n_pages, page_size)
+        # Prefix sharing (DESIGN.md §6): radix index over page-aligned
+        # prompt blocks; cache hits share physical pages via pool refcounts.
+        self.prefix_cache = None
+        if prefix_cache:
+            from repro.serving.prefix_cache import RadixPrefixCache
+            self.prefix_cache = RadixPrefixCache(
+                self.pool, max_pages=prefix_cache_pages or n_pages)
         self.max_pages_per_seq = -(-max_seq // page_size)
         self.pages = M.init_paged_cache(cfg, n_pages, page_size)
         self.last_tok: Dict[int, int] = {}
@@ -458,6 +489,9 @@ class PagedJaxExecutor(Executor):
         if prefill_chunk_size is not None:
             self._build_chunk_steps()
         self._prefill_jit: Dict[Tuple[int, ...], Any] = {}
+        self._suffix_jit: Dict[int, Any] = {}
+        self._toks_memo: Dict[int, np.ndarray] = {}   # task_id -> prompt
+        self._gtoks: Dict[int, np.ndarray] = {}       # group -> prefix toks
 
     # -- compiled steps (one per power-of-two batch bucket) --
     def _build_steps(self):
@@ -497,28 +531,154 @@ class PagedJaxExecutor(Executor):
             self._chunk_jit[c] = jax.jit(step).lower(
                 self.params, self.pages, pt, ln, toks).compile()
 
+    # -- prefix sharing (DESIGN.md §6) --
+    def _effective_prompt(self, task: Task) -> int:
+        return min(task.prompt_len, self.max_seq // 2)
+
+    def _task_tokens(self, task: Task) -> np.ndarray:
+        """Memoized per-task prompt tokens — cached_prompt_tokens sits on
+        the scheduler's per-reschedule pruning path, so the rng draw must
+        not repeat per call. Purged on release()."""
+        toks = self._toks_memo.get(task.task_id)
+        if toks is None:
+            toks = _prompt_tokens(self.seed, task, self.cfg.vocab_size,
+                                  self._effective_prompt(task))
+            self._toks_memo[task.task_id] = toks
+        return toks
+
+    def _group_tokens(self, group: int, k: int) -> np.ndarray:
+        """First k tokens of a prefix group's stream (bulk rng draws are
+        prefix-consistent, so the memo only ever grows)."""
+        cur = self._gtoks.get(group)
+        if cur is None or cur.shape[0] < k:
+            grng = np.random.default_rng(
+                (self.seed + 1) * 7_919 + 1_000_003 * (group + 1))
+            cur = grng.integers(0, self.cfg.vocab_size, (max(k, 1),))
+            self._gtoks[group] = cur
+        return cur[:k]
+
+    def _reserve(self, fn):
+        """Run a pool reservation, evicting LRU prefix-cache pages until it
+        fits before giving up: cached-but-idle prefix KV is reclaimable
+        headroom, not spent memory. OutOfPages still propagates when the
+        pool is genuinely full of live sequences."""
+        while True:
+            try:
+                return fn()
+            except OutOfPages:
+                cache = self.prefix_cache
+                if cache is None:
+                    raise
+                # escalate the eviction batch (1, 2, 4, ...): owner-shared
+                # leaves free nothing, so fixed-size nibbles could rescan
+                # the trie once per indexed node before finding a free page
+                before = self.pool.free_pages
+                batch = 1
+                while (cache.pages_indexed > 0
+                       and self.pool.free_pages == before):
+                    if cache.evict(batch) == 0:
+                        break
+                    batch *= 2
+                if self.pool.free_pages == before:
+                    raise
+
+    def _ensure_range_writable(self, tid: int, start: int, end: int) -> None:
+        """Copy-on-write defense: every page receiving tokens [start, end)
+        must be private to ``tid``. With page-aligned prefix matching a
+        shared page is an immutable full block — a task's own writes land
+        past the shared boundary in fresh pages — so this only fires on
+        boundary cases, but it guarantees divergent suffixes never alias
+        (pool.fork copies the bookkeeping; the device page is copied
+        here)."""
+        if end <= start:
+            return
+        psz = self.page_size
+        for idx in range(start // psz, (end - 1) // psz + 1):
+            forked = self._reserve(lambda i=idx: self.pool.fork(tid, i))
+            if forked is not None:
+                old, new = forked
+                for name in ("k_pages", "v_pages"):
+                    self.pages[name] = self.pages[name].at[:, new].set(
+                        self.pages[name][:, old])
+
+    def _acquire_prefix(self, task: Task, toks_np) -> int:
+        """Register this task over the cached page-aligned prefix of its
+        prompt (pool.share — zero copies). Capped at L-1 tokens so at least
+        one suffix token is always recomputed: its logits seed the first
+        output token. Returns tokens skipped (0 on miss/disabled)."""
+        if self.prefix_cache is None:
+            return 0
+        hit, _ = self.prefix_cache.acquire(task.task_id, toks_np[0],
+                                           max_tokens=toks_np.shape[1] - 1)
+        return hit
+
+    def _insert_prefix(self, task: Task, toks_np,
+                       upto: Optional[int] = None) -> None:
+        """Index the full-page prefix of a (possibly partial) prefill so
+        later tasks with the same opening tokens share its pages. Chunked
+        prefill inserts after every chunk — full pages of a mid-prefill
+        prompt are already immutable, and early insertion is what lets an
+        interleaved same-group prefill start hitting before this one
+        completes."""
+        if self.prefix_cache is None:
+            return
+        n = toks_np.shape[1] if upto is None else min(upto, toks_np.shape[1])
+        n_full = n // self.page_size
+        if n_full:
+            self.prefix_cache.insert(
+                toks_np[0, : n_full * self.page_size],
+                self.pool.page_table(task.task_id)[:n_full])
+
+    def cached_prompt_tokens(self, task: Task) -> int:
+        """Prompt tokens already resident for this task: its own prefill
+        progress, or the radix cache's matched prefix. The scheduler uses
+        this as TTFT credit (deadline-feasibility prices only the uncached
+        prompt tail)."""
+        L = self._effective_prompt(task)
+        if self.pool.holds(task.task_id):
+            return min(self.pool.length(task.task_id), L)
+        if self.prefix_cache is None:
+            return 0
+        matched, _ = self.prefix_cache.match(self._task_tokens(task)[0],
+                                             touch=False)
+        cap = ((L - 1) // self.page_size) * self.page_size
+        return min(matched, max(cap, 0))
+
+    def prompt_progress(self, task: Task) -> int:
+        """Prompt tokens cached so far (includes prefix-cache credit) — the
+        serving loop advances Task.prefill_done_tokens from this, so a
+        cache-hit task's TTFT accounting reflects the skipped chunks."""
+        return self._chunk_progress.get(task.task_id, 0)
+
     def prefill_chunk(self, task: Task, n_tokens: int) -> Tuple[float, bool]:
         if self.prefill_chunk_size is None:
             raise RuntimeError("executor built without prefill_chunk_size")
         jnp = self.jnp
-        L = min(task.prompt_len, self.max_seq // 2)
-        done = self._chunk_progress.get(task.task_id, 0)
-        if done >= L or (done == 0 and self.pool.holds(task.task_id)):
-            raise RuntimeError(f"task {task.task_id} already prefilled")
+        tid = task.task_id
+        L = self._effective_prompt(task)
+        done = self._chunk_progress.get(tid, 0)
+        if done >= L or (done == 0 and self.pool.holds(tid)):
+            raise RuntimeError(f"task {tid} already prefilled")
+        toks_full = self._task_tokens(task)
+        if done == 0:
+            # chunked prefill starts at the first uncached chunk: the
+            # matched prefix pages are shared, never recomputed
+            done = self._acquire_prefix(task, toks_full)
+            if done:
+                self._chunk_progress[tid] = done
         n = min(n_tokens, L - done)
-        toks_full = _prompt_tokens(self.seed, task.task_id,
-                                   self.cfg.vocab_size, L)
         ms = 0.0
         logits = None
         for c in _chunk_pieces(n, self.prefill_chunk_size):
             # incremental allocation: an OutOfPages here propagates with the
             # pool and progress consistent (progress is advanced per PIECE,
             # below), so a deferred task resumes from its cached tokens
-            if self.pool.holds(task.task_id):
-                self.pool.extend(task.task_id, done + c)
+            if self.pool.holds(tid):
+                self._reserve(lambda e=done + c: self.pool.extend(tid, e))
             else:
-                self.pool.alloc(task.task_id, c)
-            row = self.pool.page_table(task.task_id)
+                self._reserve(lambda e=c: self.pool.alloc(tid, e))
+            self._ensure_range_writable(tid, done, done + c)
+            row = self.pool.page_table(tid)
             pt = np.full((1, self.max_pages_per_seq), -1, np.int32)
             pt[0, : len(row)] = row
             piece = jnp.asarray(toks_full[:, done:done + c], jnp.int32)
@@ -529,10 +689,15 @@ class PagedJaxExecutor(Executor):
             logits.block_until_ready()
             ms += (time.perf_counter() - t0) * 1000.0
             done += c
-            self._chunk_progress[task.task_id] = done
+            self._chunk_progress[tid] = done
+            self._insert_prefix(task, toks_full, upto=done)
         if done >= L:
+            if logits is None:       # fully cached via acquire: the final
+                # block is capped at L-1, so at least one token always
+                # remains to compute — logits cannot be None here
+                raise RuntimeError(f"task {tid}: empty final chunk")
             self.last_prefill_logits = np.asarray(logits)
-            self.last_tok[task.task_id] = int(jnp.argmax(logits[0]))
+            self.last_tok[tid] = int(jnp.argmax(logits[0]))
             return ms, True
         return ms, False
 
@@ -541,23 +706,65 @@ class PagedJaxExecutor(Executor):
         task (capped prompt + full output) against the pool, counting pages
         currently held by running tasks. seq_cap/max_tasks mirror this
         engine's hard limits so admission never composes a batch the engine
-        would raise on."""
+        would raise on. With the prefix cache enabled, admission sees the
+        live free count (plus reclaimable cached pages) and counts each
+        shared prompt prefix once (DESIGN.md §6)."""
+        free_pages_now = None
+        prefix_pages = None
+        if self.prefix_cache is not None:
+            cache, psz = self.prefix_cache, self.page_size
+
+            def free_pages_now():
+                return self.pool.free_pages + cache.reclaimable_pages()
+
+            def prefix_pages(t):
+                if getattr(t, "prefix_group", None) is None:
+                    return None, 0
+                L = self._effective_prompt(t)
+                k = min(t.prefix_len or 0, max(L - 1, 0))
+                kp = k // psz
+                if self.prefill_chunk_size is not None and kp:
+                    # chunked prefills interleave, so insert-at-completion
+                    # ordering no longer guarantees a within-round
+                    # discount is physically realized — discount only
+                    # pages resident RIGHT NOW (per-chunk insertion makes
+                    # admission catch up at the next reschedule). Atomic
+                    # prefills drain serially before any decode, where the
+                    # declared count is exact.
+                    matched, _ = cache.match(self._group_tokens(
+                        t.prefix_group, kp * psz), touch=False)
+                    kp = min(kp, matched // psz)
+                return ("prefix", t.prefix_group), kp
         return PageBudget(
             total_pages=self.n_pages, page_size=self.page_size,
             prompt_cap=self.max_seq // 2, seq_cap=self.max_seq,
             max_tasks=self.max_batch,
             held_pages=lambda t: (len(self.pool.page_table(t.task_id))
-                                  if self.pool.holds(t.task_id) else 0))
+                                  if self.pool.holds(t.task_id) else 0),
+            free_pages_now=free_pages_now, prefix_pages=prefix_pages)
 
     # -- ops --
     def prefill(self, task: Task) -> float:
         jax, jnp, M = self.jax, self.jnp, self.M
-        L = min(task.prompt_len, self.max_seq // 2)
-        if self.pool.holds(task.task_id):
-            raise RuntimeError(f"task {task.task_id} already prefilled")
-        phys = self.pool.alloc(task.task_id, L)      # OutOfPages -> caller
-        toks = jnp.asarray(_prompt_tokens(self.seed, task.task_id,
-                                          self.cfg.vocab_size, L), jnp.int32)
+        tid = task.task_id
+        L = self._effective_prompt(task)
+        if self.pool.holds(tid):
+            raise RuntimeError(f"task {tid} already prefilled")
+        toks_np = self._task_tokens(task)
+        hit = self._acquire_prefix(task, toks_np)    # pool.share on a hit
+        if hit > 0:
+            try:
+                ms = self._prefill_suffix(task, toks_np, hit, L)
+            except OutOfPages:
+                # roll back the share so a deferred task re-enters prefill
+                # cleanly — the OutOfPages contract is 'state unchanged'
+                self.pool.free(tid)
+                raise
+            self._insert_prefix(task, toks_np)
+            return ms
+        phys = self._reserve(
+            lambda: self.pool.alloc(tid, L))         # OutOfPages -> caller
+        toks = jnp.asarray(toks_np, jnp.int32)
         key = (L,)
         if key not in self._prefill_jit:
             # AOT-compile so jit tracing never pollutes the measured latency
@@ -580,7 +787,67 @@ class PagedJaxExecutor(Executor):
                     .swapaxes(1, 2))
             self.pages[name] = self.pages[name].at[:, idx].set(view)
         self.last_prefill_logits = np.asarray(last)
-        self.last_tok[task.task_id] = int(jnp.argmax(last[0]))
+        self.last_tok[tid] = int(jnp.argmax(last[0]))
+        self._insert_prefix(task, toks_np)
+        return ms
+
+    def _suffix_step(self, c: int):
+        """Compiled prefill_chunk_paged step for a power-of-two piece size
+        — the suffix jit cache is bounded at O(log max_seq) entries, same
+        economics as the decode/chunk buckets."""
+        if c not in self._suffix_jit:
+            jax, jnp, M = self.jax, self.jnp, self.M
+            pt0 = jnp.full((1, self.max_pages_per_seq), -1, jnp.int32)
+            ln0 = jnp.zeros((1,), jnp.int32)
+            tk0 = jnp.zeros((1, c), jnp.int32)
+
+            def step(params, pages, pt, lengths, toks):
+                return M.prefill_chunk_paged(
+                    self.cfg, params, pages, pt, lengths, toks,
+                    use_kernel=self.use_paged_kernel)
+
+            self._suffix_jit[c] = jax.jit(step).lower(
+                self.params, self.pages, pt0, ln0, tk0).compile()
+        return self._suffix_jit[c]
+
+    def _prefill_suffix(self, task: Task, toks_np, start: int,
+                        L: int) -> float:
+        """Cache-hit atomic prefill: only the uncached suffix runs through
+        the engine, its queries attending over the shared prefix pages.
+        The suffix is decomposed into power-of-two pieces (largest first),
+        so arbitrary (prompt, prefix) length pairs reuse one small set of
+        compiled steps. The skipped prefix is the TTFT win the prefix
+        cache exists for."""
+        jnp = self.jnp
+        tid = task.task_id
+        self._reserve(lambda: self.pool.extend(tid, L))
+        self._ensure_range_writable(tid, start, L)
+        row = self.pool.page_table(tid)
+        pt = np.full((1, self.max_pages_per_seq), -1, np.int32)
+        pt[0, : len(row)] = row
+        pt = jnp.asarray(pt)
+        n = L - start
+        pieces = []                          # binary decomposition of n
+        b = 1 << (n.bit_length() - 1)
+        while n:
+            if n >= b:
+                pieces.append(b)
+                n -= b
+            b >>= 1
+        done = start
+        ms = 0.0
+        logits = None
+        for c in pieces:
+            fn = self._suffix_step(c)
+            piece = jnp.asarray(toks_np[:, done:done + c], jnp.int32)
+            t0 = time.perf_counter()
+            logits, self.pages = fn(self.params, self.pages, pt,
+                                    jnp.asarray([done], jnp.int32), piece)
+            logits.block_until_ready()
+            ms += (time.perf_counter() - t0) * 1000.0
+            done += c
+        self.last_prefill_logits = np.asarray(logits)
+        self.last_tok[tid] = int(jnp.argmax(logits[0]))
         return ms
 
     def decode(self, tasks: Sequence[Task]) -> float:
@@ -593,7 +860,9 @@ class PagedJaxExecutor(Executor):
         for i, ln in zip(ids, lengths):
             if ln + 1 > self.max_seq:
                 raise RuntimeError(f"task {i} exceeds max_seq {self.max_seq}")
-            self.pool.extend(i, ln + 1)              # page for the new token
+            self._reserve(
+                lambda i=i, ln=ln: self.pool.extend(i, ln + 1))
+            self._ensure_range_writable(i, ln, ln + 1)   # CoW (DESIGN.md §6)
         b = 1
         while b < len(tasks):
             b *= 2
@@ -625,6 +894,7 @@ class PagedJaxExecutor(Executor):
         self.pool.free(task.task_id)
         self.last_tok.pop(task.task_id, None)
         self._chunk_progress.pop(task.task_id, None)
+        self._toks_memo.pop(task.task_id, None)
 
     def latency_model(self) -> LatencyModel:
         """Measure l(b) on the live engine (warm jit) — MeasuredLatencyModel."""

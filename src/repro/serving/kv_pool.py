@@ -1,4 +1,4 @@
-"""Paged KV-cache block pool (DESIGN.md §3 adaptation #2).
+"""Paged KV-cache block pool (DESIGN.md §3 adaptation #2, §6).
 
 The slot-based ``JaxExecutor`` reserves a contiguous ``max_seq`` KV buffer
 per admitted task, so admission is bounded by worst-case memory:
@@ -10,6 +10,14 @@ free list is the single source of truth for residency, which is what lets
 SLICE's admission (core.selection.PageBudget) reason about *actual* memory
 instead of a fixed slot count.
 
+Pages are REFCOUNTED (DESIGN.md §6): two owners with a common page-aligned
+prompt prefix can hold the same physical pages (``share``), and the radix
+prefix cache (serving.prefix_cache) can pin pages beyond any owner's
+lifetime (``retain_page``/``release_page``). A shared page is immutable
+from any single owner's point of view; an owner that must write into one
+first breaks the sharing with ``fork`` (copy-on-write — the caller copies
+the device-side page contents, this class only swaps the bookkeeping).
+
 Pure bookkeeping — no jax. The executor owns the physical page arrays
 (``k_pages``/``v_pages``: [L, n_pages, Hkv, page_size, hd]); this class
 owns which page ids belong to which task. A slot array is the degenerate
@@ -18,12 +26,13 @@ kv_pressure benchmark compares the two layouts at equal bytes.
 """
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict, List, Optional, Sequence, Tuple
 
 
 class OutOfPages(RuntimeError):
-    """Raised when an alloc/extend cannot be satisfied. State is unchanged —
-    callers (scheduler admission) defer the task rather than drop it."""
+    """Raised when an alloc/extend/fork cannot be satisfied. State is
+    unchanged — callers (scheduler admission) defer the task rather than
+    drop it."""
 
 
 class KVPagePool:
@@ -35,6 +44,8 @@ class KVPagePool:
         self._free: List[int] = list(range(n_pages))
         self._table: Dict[int, List[int]] = {}   # owner -> page ids, in order
         self._len: Dict[int, int] = {}           # owner -> cached tokens
+        self._ref: Dict[int, int] = {}           # page -> total refcount
+        self._pins: Dict[int, int] = {}          # page -> non-owner retains
 
     # ---- accounting ----
     def pages_for(self, n_tokens: int) -> int:
@@ -61,6 +72,19 @@ class KVPagePool:
     def holds(self, owner: int) -> bool:
         return owner in self._table
 
+    def ref_count(self, page: int) -> int:
+        """Total references (owner table entries + external pins)."""
+        return self._ref.get(page, 0)
+
+    def owner_refs(self, page: int) -> int:
+        """References held by owners (table entries), excluding pins."""
+        return self._ref.get(page, 0) - self._pins.get(page, 0)
+
+    def is_shared(self, owner: int, logical_idx: int) -> bool:
+        """True when owner's logical page has other references — writing it
+        requires a fork() first (copy-on-write)."""
+        return self._ref[self._table[owner][logical_idx]] > 1
+
     # ---- alloc / extend / free ----
     def alloc(self, owner: int, n_tokens: int) -> List[int]:
         """Reserve pages for a new owner's first n_tokens. Returns page ids."""
@@ -72,6 +96,8 @@ class KVPagePool:
                 f"need {need} pages for {n_tokens} tokens, "
                 f"{len(self._free)}/{self.n_pages} free")
         pages = [self._free.pop(0) for _ in range(need)]
+        for p in pages:
+            self._ref[p] = 1
         self._table[owner] = pages
         self._len[owner] = n_tokens
         return list(pages)
@@ -79,7 +105,8 @@ class KVPagePool:
     def extend(self, owner: int, new_len: int) -> List[int]:
         """Grow an owner's allocation to cover new_len tokens. Returns the
         newly allocated page ids (possibly empty). Shrinking is a no-op:
-        pages are only returned wholesale by free()."""
+        pages are only returned wholesale by free(). On OutOfPages the pool
+        (free list, refcounts, tables) is left exactly as it was."""
         if owner not in self._table:
             raise ValueError(f"owner {owner} holds no pages")
         if new_len <= self._len[owner]:
@@ -90,25 +117,111 @@ class KVPagePool:
                 f"extend to {new_len} tokens needs {grow} more pages, "
                 f"{len(self._free)}/{self.n_pages} free")
         fresh = [self._free.pop(0) for _ in range(max(grow, 0))]
+        for p in fresh:
+            self._ref[p] = 1
         self._table[owner].extend(fresh)
         self._len[owner] = new_len
         return fresh
 
     def free(self, owner: int) -> int:
-        """Return all of owner's pages to the pool. Returns #pages freed.
-        Unknown owners are a no-op (idempotent release)."""
+        """Drop all of owner's references; pages whose refcount hits zero
+        return to the pool. Returns #pages actually freed. Unknown owners
+        are a no-op (idempotent release)."""
         pages = self._table.pop(owner, None)
         self._len.pop(owner, None)
         if pages is None:
             return 0
-        self._free.extend(pages)
-        return len(pages)
+        freed = 0
+        for p in pages:
+            freed += self._unref(p)
+        return freed
+
+    # ---- sharing (DESIGN.md §6) ----
+    def share(self, owner: int, pages: Sequence[int], n_tokens: int) -> None:
+        """Register a new owner over EXISTING pages (a cached prompt prefix):
+        the owner's table starts as ``pages`` covering ``n_tokens`` cached
+        tokens, and every page's refcount is incremented. ``n_tokens`` must
+        exactly fill the pages (page-aligned prefix, DESIGN.md deviation #5)
+        so a later extend() never writes into a shared page mid-stream."""
+        if owner in self._table:
+            raise ValueError(f"owner {owner} already holds pages")
+        if n_tokens != len(pages) * self.page_size:
+            raise ValueError(
+                f"shared prefix must be page-aligned: {n_tokens} tokens "
+                f"!= {len(pages)} pages x {self.page_size}")
+        for p in pages:
+            if self._ref.get(p, 0) <= 0:
+                raise ValueError(f"page {p} is not allocated")
+        for p in pages:
+            self._ref[p] += 1
+        self._table[owner] = list(pages)
+        self._len[owner] = n_tokens
+
+    def fork(self, owner: int, logical_idx: int) -> Optional[Tuple[int, int]]:
+        """Copy-on-write: give owner a private copy of its logical page.
+
+        Returns (old_phys, new_phys) — the caller must copy the device-side
+        page contents old -> new before writing — or None when the page was
+        already private (refcount 1, nothing to do). Raises OutOfPages
+        (state unchanged) when no free page is available for the copy."""
+        page = self._table[owner][logical_idx]
+        if self._ref[page] <= 1:
+            return None
+        if not self._free:
+            raise OutOfPages(
+                f"fork of page {page} needs 1 free page, 0/{self.n_pages} free")
+        new = self._free.pop(0)
+        self._ref[page] -= 1
+        self._ref[new] = 1
+        self._table[owner][logical_idx] = new
+        return page, new
+
+    def retain_page(self, page: int) -> None:
+        """External (non-owner) pin — the prefix cache retaining a page
+        beyond its inserting owner's lifetime."""
+        if self._ref.get(page, 0) <= 0:
+            raise ValueError(f"page {page} is not allocated")
+        self._ref[page] += 1
+        self._pins[page] = self._pins.get(page, 0) + 1
+
+    def release_page(self, page: int) -> bool:
+        """Drop one external pin. Returns True when the page went back to
+        the free list (no owners or other pins left)."""
+        pins = self._pins.get(page, 0)
+        if pins <= 0:
+            raise ValueError(f"page {page} has no external pins")
+        if pins == 1:
+            self._pins.pop(page)
+        else:
+            self._pins[page] = pins - 1
+        return self._unref(page) == 1
+
+    def _unref(self, page: int) -> int:
+        self._ref[page] -= 1
+        if self._ref[page] == 0:
+            del self._ref[page]
+            self._free.append(page)
+            return 1
+        return 0
 
     def check(self) -> None:
-        """Invariant audit: every page accounted for exactly once."""
-        held = [p for pages in self._table.values() for p in pages]
-        seen = held + self._free
-        assert len(seen) == self.n_pages, (len(seen), self.n_pages)
-        assert len(set(seen)) == self.n_pages, "page owned twice"
+        """Invariant audit: every page is either free (no references) or
+        allocated with refcount == owner table occurrences + external pins;
+        free list and allocated set partition the arena."""
+        occurrences: Dict[int, int] = {}
+        for pages in self._table.values():
+            for p in pages:
+                occurrences[p] = occurrences.get(p, 0) + 1
+        allocated = set(self._ref)
+        assert allocated.isdisjoint(self._free), "page both free and allocated"
+        assert len(allocated) + len(self._free) == self.n_pages, (
+            len(allocated), len(self._free), self.n_pages)
+        assert len(set(self._free)) == len(self._free), "page freed twice"
+        for p, r in self._ref.items():
+            assert r == occurrences.get(p, 0) + self._pins.get(p, 0), (
+                p, r, occurrences.get(p, 0), self._pins.get(p, 0))
+            assert r > 0, (p, r)
+        for p in self._pins:
+            assert p in allocated, f"pinned page {p} not allocated"
         for o, pages in self._table.items():
             assert len(pages) == self.pages_for(self._len[o]), (o, pages)

@@ -89,6 +89,13 @@ def run_serving_loop(scheduler: Scheduler, executor: Executor,
             n_chunks += 1
             t.prefill_done_tokens = min(t.prompt_len,
                                         t.prefill_done_tokens + action.n_tokens)
+            # prefix-cache credit (DESIGN.md §6): an executor that skipped
+            # cached prefix chunks reports the larger true progress, so
+            # the scheduler stops scheduling chunks the cache already paid
+            prog = getattr(executor, "prompt_progress", None)
+            if prog is not None:
+                t.prefill_done_tokens = max(t.prefill_done_tokens,
+                                            min(t.prompt_len, int(prog(t))))
             if done:
                 # first token at FINAL chunk completion (TTFT convention)
                 t.prefill_done_tokens = t.prompt_len

@@ -116,6 +116,84 @@ def test_measured_latency_monotone_inputs_monotone_outputs(points, off):
         assert m.decode_ms(b) == pytest.approx(ms)
 
 
+@given(st.data())
+@settings(max_examples=80, deadline=None)
+def test_radix_pool_interleavings_no_leaks_no_aliasing(data):
+    """DESIGN.md §6 safety: random interleavings of acquire(match+share) /
+    insert / fork / free / evict on the radix index over a refcounted pool
+    never leak pages and never alias pages across divergent suffixes —
+    every page a match returns (and every page an owner holds) contains
+    exactly the token block its position claims."""
+    from repro.serving.kv_pool import KVPagePool, OutOfPages
+    from repro.serving.prefix_cache import RadixPrefixCache
+
+    PSZ = 2
+    pool = KVPagePool(n_pages=24, page_size=PSZ)
+    cache = RadixPrefixCache(pool, max_pages=12)
+    shadow = {}          # phys page -> tokens written (partial on last page)
+    owners = {}          # owner -> its prompt tokens
+    next_owner = 0
+    token = st.integers(0, 1)   # tiny alphabet forces prefix collisions
+    ops = data.draw(st.lists(st.sampled_from(
+        ["new", "free", "fork", "evict", "match"]), min_size=1, max_size=40))
+    for op in ops:
+        if op == "new":
+            toks = tuple(data.draw(
+                st.lists(token, min_size=1, max_size=8), label="prompt"))
+            o, next_owner = next_owner, next_owner + 1
+            hit, pages = cache.acquire(o, toks, max_tokens=len(toks) - 1)
+            for i, p in enumerate(pages):   # shared prefix: exact blocks
+                assert shadow[p] == toks[i * PSZ:(i + 1) * PSZ]
+            try:
+                if hit:
+                    pool.extend(o, len(toks))
+                else:
+                    pool.alloc(o, len(toks))
+            except OutOfPages:
+                pool.free(o)                # roll back the share
+                pool.check()
+                continue
+            tbl = pool.page_table(o)
+            for li in range(hit // PSZ, len(tbl)):   # private suffix pages
+                shadow[tbl[li]] = toks[li * PSZ:(li + 1) * PSZ]
+            owners[o] = toks
+            nfull = len(toks) // PSZ
+            cache.insert(toks[:nfull * PSZ], tbl[:nfull])
+        elif op == "free" and owners:
+            o = data.draw(st.sampled_from(sorted(owners)), label="free")
+            pool.free(o)
+            del owners[o]
+        elif op == "fork" and owners:
+            o = data.draw(st.sampled_from(sorted(owners)), label="fork")
+            tbl = pool.page_table(o)
+            li = data.draw(st.integers(0, len(tbl) - 1), label="page")
+            try:
+                forked = pool.fork(o, li)
+            except OutOfPages:
+                forked = None
+            if forked is not None:
+                shadow[forked[1]] = shadow[forked[0]]   # device-side copy
+        elif op == "evict":
+            cache.evict(1)
+        elif op == "match":
+            toks = tuple(data.draw(
+                st.lists(token, min_size=0, max_size=8), label="query"))
+            n, pages = cache.match(toks)
+            assert n == len(pages) * PSZ
+            for i, p in enumerate(pages):   # no cross-suffix aliasing
+                assert shadow[p] == toks[i * PSZ:(i + 1) * PSZ]
+        pool.check()
+        for o, toks in owners.items():      # owners see only their tokens
+            for li, p in enumerate(pool.page_table(o)):
+                got = shadow[p]
+                assert got == toks[li * PSZ: li * PSZ + len(got)]
+    for o in list(owners):
+        pool.free(o)
+    cache.clear()
+    assert pool.used_pages == 0             # zero leaks
+    pool.check()
+
+
 @given(st.integers(1, 64), st.integers(1, 64))
 @settings(deadline=None, max_examples=30)
 def test_jax_mask_matrix_matches_numpy(v0, n):
