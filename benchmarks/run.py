@@ -40,6 +40,9 @@ GATES = [
     ("prefix_sharing", ("sim", "shared/frac=0.9", "slo"), "high", 0.05),
     ("prefix_sharing", ("sim", "shared/frac=0.9", "rt_slo"), "high", 0.05),
     ("prefix_sharing", ("engine", "resident_ratio"), "high", 0.0),
+    ("kv_swap", ("sim", "swap", "rt_ttft_p99_ms"), "low", 0.10),
+    ("kv_swap", ("sim", "swap", "rt_slo"), "high", 0.05),
+    ("kv_swap", ("sim", "ttft_p99_improvement"), "high", 0.10),
 ]
 
 
@@ -112,7 +115,7 @@ def main() -> None:
                     help="skip real-JAX-engine measurements (faster)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: "
-                         "fig1,table2,fig7,fig10,fig11,kv,prefill,prefix")
+                         "fig1,table2,fig7,fig10,fig11,kv,prefill,prefix,swap")
     ap.add_argument("--tiny", action="store_true",
                     help="CI smoke configs for the benches that have one")
     ap.add_argument("--check", action="store_true",
@@ -128,9 +131,10 @@ def main() -> None:
                  "(baselines are recorded at the tiny CI config)")
     only = set(args.only.split(",")) if args.only else None
 
-    from benchmarks import (dynamic_slo, kv_pressure, latency_vs_batch,
-                            prefill_interference, prefix_sharing, ratio_sweep,
-                            static_tpot, workload_sweep)
+    from benchmarks import (dynamic_slo, kv_pressure, kv_swap,
+                            latency_vs_batch, prefill_interference,
+                            prefix_sharing, ratio_sweep, static_tpot,
+                            workload_sweep)
 
     print("name,value,derived")
     t0 = time.time()
@@ -151,11 +155,15 @@ def main() -> None:
                                  engine=not args.skip_engine and not args.tiny)
     if only is None or "prefix" in only:
         prefix_sharing.run(tiny=args.tiny, engine=not args.skip_engine)
+    if only is None or "swap" in only:
+        kv_swap.run(tiny=args.tiny, engine=not args.skip_engine)
     print(f"total_wall_s,{time.time() - t0:.1f},", flush=True)
 
     ran = {"prefill_interference"} if only is None or "prefill" in only else set()
     if only is None or "prefix" in only:
         ran.add("prefix_sharing")
+    if only is None or "swap" in only:
+        ran.add("kv_swap")
     if args.update_baselines:
         update_baselines(sorted(ran & set(_gated_benches())))
     if args.check:

@@ -19,11 +19,31 @@ from typing import Dict, Sequence, Tuple
 
 
 class LatencyModel:
+    # Host-offload KV swap pricing (DESIGN.md §7): moving a suspended task's
+    # KV between device and host is a pure bandwidth transfer over the
+    # host link. Defaults model the paper's testbed — ChatGLM2-6B fp16 KV
+    # (28 layers x 2 KV heads x 128 head dim x 2 bytes x K&V = 28 KiB per
+    # token) over a PCIe-class 8 GB/s link — and are plain attributes so a
+    # deployment (or serve.py --swap-bw-gbps) can overwrite them on any
+    # model instance without subclassing.
+    swap_bw_gbps: float = 8.0
+    kv_bytes_per_token: float = 28672.0
+    swap_overhead_ms: float = 0.2          # per-transfer launch/pinning cost
+
     def decode_ms(self, batch: int) -> float:
         raise NotImplementedError
 
     def prefill_ms(self, prompt_len: int) -> float:
         raise NotImplementedError
+
+    def swap_ms(self, n_tokens: int) -> float:
+        """One-way device<->host transfer time for n_tokens of KV (used by
+        SimExecutor.suspend/resume and by the scheduler's resume-headroom
+        pricing so planned swap-ins never break Eq. 7's cycle budget)."""
+        if n_tokens <= 0 or self.swap_bw_gbps <= 0:
+            return 0.0
+        return (self.swap_overhead_ms
+                + n_tokens * self.kv_bytes_per_token / (self.swap_bw_gbps * 1e6))
 
     def __call__(self, batch: int) -> float:
         if batch <= 0:

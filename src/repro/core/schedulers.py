@@ -20,12 +20,31 @@ from repro.core.mask_matrix import (build_mask_matrix, column_batches,
                                     mask_matrix_period_ms, quantized_rate,
                                     stagger_columns)
 from repro.core.selection import (PERIOD_BUDGET_MS, PageBudget,
-                                  prefill_chunk_budget, task_selection)
+                                  prefill_chunk_budget, select_swap_victims,
+                                  task_selection)
 from repro.core.task import Task
 
 
 @dataclasses.dataclass
 class PrefillAction:
+    task: Task
+
+
+@dataclasses.dataclass
+class SuspendAction:
+    """Swap a resident task's private KV pages to host memory (DESIGN.md
+    §7) — the executor's suspend(); the serving loop flips task.suspended
+    after it lands. Emitted to free device pages for a higher-priority
+    admission."""
+    task: Task
+
+
+@dataclasses.dataclass
+class ResumeAction:
+    """Bring a suspended task's KV back onto the device before it decodes
+    again — the executor's resume(). The restore transfer is priced into
+    the cycle (LatencyModel.swap_ms), so schedulers reserve headroom for
+    planned resumes."""
     task: Task
 
 
@@ -77,9 +96,21 @@ class SliceScheduler(Scheduler):
                  stagger: bool = False, prefill_headroom: bool = True,
                  page_budget: Optional[PageBudget] = None,
                  prefill_chunk: Optional[int] = None,
-                 prefix_hint: Optional[Callable[[Task], int]] = None):
+                 prefix_hint: Optional[Callable[[Task], int]] = None,
+                 kv_swap: bool = False):
         self.lat = lat
         self.budget_ms = budget_ms
+        # Host-offload KV swap (DESIGN.md §7): when PageBudget cannot admit
+        # a time-feasible realtime arrival, suspend the lowest-marginal-
+        # utility non-realtime residents (selection.select_swap_victims) to
+        # host memory instead of deferring the arrival; suspended tasks
+        # re-enter selection and are resumed — restore priced into the
+        # Eq. 7 headroom — before they decode again.
+        self.kv_swap = kv_swap
+        self.suspend_queue: List[Task] = []
+        self.resume_queue: List[Task] = []
+        self._swap_blocked: set = set()    # failed suspend/resume: retry
+                                           # only after a completion
         # Prefix-cache TTFT credit (DESIGN.md §6): an executor with a radix
         # prefix cache reports how many prompt tokens of a task are already
         # resident; deadline-feasibility pricing then charges only the
@@ -146,6 +177,84 @@ class SliceScheduler(Scheduler):
 
     def on_finish(self, task: Task, now: float) -> None:
         self.need_resched = True
+        self._swap_blocked.clear()         # space freed: swaps may retry
+
+    def note_suspend_failed(self, task: Task) -> None:
+        """Host arena full: the task stayed resident. Stop picking it as
+        a victim (a zero-time retry loop otherwise) until a completion
+        frees host or device space."""
+        self._swap_blocked.add(task.task_id)
+        self.need_resched = True
+
+    def note_resume_failed(self, task: Task) -> None:
+        """The executor could not re-host a suspended task (OutOfPages —
+        admission under-estimated, e.g. shared pages diverged). Back it out
+        of the batch; it stays suspended, blocked from resume retries
+        until a completion frees pages, and re-enters selection."""
+        self._swap_blocked.add(task.task_id)
+        if task in self.batch:
+            self.batch.remove(task)
+            self.pool.append(task)
+        self.need_resched = True
+
+    def _swap_headroom_ms(self, candidates: Sequence[Task]) -> float:
+        """Eq. 7 headroom for planned swap-ins (DESIGN.md §7): a suspended
+        candidate that selection admits must be restored over the host link
+        before it decodes, and that transfer spends cycle time exactly like
+        a prefill does. Reserving the restore cost up front keeps the
+        *delivered* cycle under budget, so resumes never break the mask-
+        matrix TPOT guarantees. Conservative (prices every suspended
+        candidate, selected or not), capped at a quarter cycle."""
+        if not self.kv_swap:
+            return 0.0
+        cost = sum(self.lat.swap_ms(t.prompt_len + t.tokens_done)
+                   for t in candidates if t.suspended)
+        return min(0.25 * self.budget_ms, cost)
+
+    def _plan_swaps(self, selected: List[Task], rest: List[Task],
+                    sel_budget_ms: float) -> List[Task]:
+        """Find the highest-utility realtime task that memory (not time)
+        kept out of ``selected`` and pick victims whose suspension would
+        admit it (selection.select_swap_victims). One starved arrival per
+        replan: each suspension lands, frees its pages, and triggers a
+        fresh reschedule that re-evaluates the remainder."""
+        budget = self.page_budget
+        rt_deferred = [t for t in rest
+                       if t.slo.realtime and not t.dropped and not t.finished]
+        if not rt_deferred:
+            return []
+        # memory-starved = a TIME-only selection would admit it. Testing
+        # against the final batch instead would under-trigger: a memory-
+        # deferred high-utility RT leaves time slack that later low-utility
+        # tasks then fill, so the delivered batch always *looks* time-full.
+        time_sel, _ = task_selection(selected + rest, self.lat, sel_budget_ms,
+                                     page_budget=None)
+        time_ids = {t.task_id for t in time_sel}
+        starved = [t for t in rt_deferred if t.task_id in time_ids]
+        if not starved:
+            return []
+        starved.sort(key=lambda t: (-t.utility_rate, t.arrival_ms, t.task_id))
+        # pages available after every selected task grows to its reserved
+        # peak — the same arithmetic task_selection charged
+        if budget.free_pages_now is not None:
+            free = int(budget.free_pages_now())
+        else:
+            free = budget.total_pages - sum(
+                budget.held_for(x) for x in selected + rest)
+        reserved = sum(max(0, budget.pages_for(s) - budget.held_for(s))
+                       for s in selected)
+        avail = free - reserved
+        for t in starved:
+            shortfall = (budget.pages_for(t) - budget.held_for(t)) - avail
+            if shortfall <= 0:
+                continue        # deferred for another reason (e.g. max_tasks)
+            eligible = [x for x in selected + rest
+                        if x.task_id not in self._swap_blocked]
+            victims = select_swap_victims(shortfall, eligible,
+                                          budget, protect=[t])
+            if victims:
+                return victims
+        return []
 
     def _drop_hopeless(self, now: float) -> None:
         """Deadline-feasibility pruning (beyond-paper): a real-time task whose
@@ -187,9 +296,23 @@ class SliceScheduler(Scheduler):
                 if not t.dropped and self.page_budget.infeasible(t):
                     t.dropped = True
         candidates = [t for t in candidates if not t.dropped]
-        selected, rest = task_selection(candidates, self.lat,
-                                        self.budget_ms - self._headroom_ms(),
+        sel_budget = (self.budget_ms - self._headroom_ms()
+                      - self._swap_headroom_ms(candidates))
+        selected, rest = task_selection(candidates, self.lat, sel_budget,
                                         page_budget=self.page_budget)
+        self.suspend_queue = []
+        if self.kv_swap and self.page_budget is not None:
+            victims = self._plan_swaps(selected, rest, sel_budget)
+            if victims:
+                vids = {v.task_id for v in victims}
+                selected = [t for t in selected if t.task_id not in vids]
+                rest = rest + [v for v in victims if v not in rest]
+                self.suspend_queue = victims
+        # suspended tasks that won admission must be re-hosted before they
+        # decode; their mask rows are skipped until the resume lands
+        # (resume-blocked ones wait for a completion to clear the block)
+        self.resume_queue = [t for t in selected if t.suspended
+                             and t.task_id not in self._swap_blocked]
         self.batch = sorted(selected, key=lambda t: -quantized_rate(t.slo.tpot_ms))
         self.pool = rest
         live_ids = {t.task_id for t in self.batch}
@@ -251,6 +374,7 @@ class SliceScheduler(Scheduler):
             self.col += 1
             tasks = [self.batch[r] for r in rows
                      if not self.batch[r].finished
+                     and not self.batch[r].suspended
                      and self.batch[r].prefill_done_ms is not None]
             if tasks:
                 for t in tasks:
@@ -272,6 +396,16 @@ class SliceScheduler(Scheduler):
     def next_action(self, now: float):
         if self.need_resched:
             self._reschedule(now)
+        if self.suspend_queue:
+            # one suspension per plan: when it lands the loop comes back
+            # here, the replan sees the freed pages and re-evaluates
+            t = self.suspend_queue.pop(0)
+            self.need_resched = True
+            return SuspendAction(t)
+        while self.resume_queue:
+            t = self.resume_queue.pop(0)
+            if t.suspended and not t.dropped and not t.finished:
+                return ResumeAction(t)
         if self.prefill_chunk is None:
             # atomic prefill: drain the whole queue ahead of any decode —
             # the head-of-line blocking mode chunked prefill exists to avoid
@@ -355,18 +489,32 @@ class FastServeScheduler(Scheduler):
     iteration decodes the top max_batch tasks by (queue priority, arrival) —
     under edge loads this merges everything into one batch, reproducing the
     paper's observation that FastServe == Orca there.
+
+    With ``page_budget`` + ``kv_swap=True`` this is the *faithful* FastServe
+    (§5.2 of its paper): proactive KV swapping to host memory. A new arrival
+    whose pages do not fit triggers swap-out of the lowest-priority resident
+    — most-demoted queue first, youngest within a queue — and suspended
+    tasks are swapped back in by MLFQ priority as soon as pages allow.
+    Without ``kv_swap`` the arrival simply waits (defer-only baseline).
     """
     name = "fastserve"
 
     def __init__(self, max_batch: int = 32, n_queues: int = 4,
-                 base_quantum: int = 16):
+                 base_quantum: int = 16,
+                 page_budget: Optional[PageBudget] = None,
+                 kv_swap: bool = False):
         self.max_batch = max_batch
         self.n_queues = n_queues
         self.base_quantum = base_quantum
+        self.page_budget = page_budget
+        self.kv_swap = kv_swap
         self.waiting: List[Task] = []
-        self.running: List[Task] = []      # prefilled, unfinished
+        self.running: List[Task] = []      # prefilled, unfinished (may be
+                                           # suspended — excluded from decode)
         self.queue_of = {}                 # task_id -> queue index
         self.tokens_in_queue = {}          # task_id -> tokens since demotion
+        self._swap_blocked: set = set()    # failed suspend/resume: retry
+                                           # only after a completion
 
     def _quantum(self, q: int) -> int:
         return self.base_quantum * (2 ** q)
@@ -383,6 +531,11 @@ class FastServeScheduler(Scheduler):
     def on_finish(self, task: Task, now: float) -> None:
         if task in self.running:
             self.running.remove(task)
+        # MLFQ bookkeeping dies with the task, or queue_of/tokens_in_queue
+        # grow without bound across a long serving run
+        self.queue_of.pop(task.task_id, None)
+        self.tokens_in_queue.pop(task.task_id, None)
+        self._swap_blocked.clear()         # space freed: swaps may retry
 
     def note_prefilled(self, task: Task) -> None:
         self.running.append(task)
@@ -392,13 +545,93 @@ class FastServeScheduler(Scheduler):
     def _priority(self, t: Task):
         return (self.queue_of[t.task_id], t.arrival_ms, t.task_id)
 
-    def next_action(self, now: float):
-        self.running = [t for t in self.running if not t.finished]
-        if self.waiting:
-            return PrefillAction(self.waiting.pop(0))
-        if not self.running:
+    def _prune(self) -> None:
+        for t in self.running:
+            if t.dropped:                  # dropped mid-run: same cleanup
+                self.queue_of.pop(t.task_id, None)
+                self.tokens_in_queue.pop(t.task_id, None)
+        self.running = [t for t in self.running
+                        if not t.finished and not t.dropped]
+        self.waiting = [t for t in self.waiting if not t.dropped]
+
+    def _charge(self, t: Task) -> int:
+        """Pages a resident is charged for: its PEAK reservation while
+        active (a decoding task grows into it — charging current holdings
+        would over-promise the pool and crash the engine mid-decode, the
+        same rule selection.py applies for SLICE), its current (shared)
+        holdings while suspended (it cannot grow until resumed)."""
+        b = self.page_budget
+        if t.suspended:
+            return b.held_for(t)
+        return max(b.pages_for(t), b.held_for(t))
+
+    def _free_pages(self) -> int:
+        return self.page_budget.total_pages - sum(
+            self._charge(t) for t in self.running)
+
+    def _fits(self, task: Task) -> bool:
+        need = self.page_budget.pages_for(task) - self.page_budget.held_for(task)
+        return need <= self._free_pages()
+
+    def _swap_action(self):
+        """Proactive swap (kv_swap=True): make room for the waiting head by
+        suspending the lowest-priority resident, but only when the
+        residents' pages can actually cover the head — otherwise suspending
+        would thrash the host link without ever admitting it."""
+        head = self.waiting[0]
+        evictable = sorted(
+            [t for t in self.running
+             if not t.suspended and self.page_budget.held_for(t) > 0
+             and t.task_id not in self._swap_blocked],
+            key=self._priority, reverse=True)   # most-demoted, youngest first
+        coverable = self._free_pages() + sum(
+            self._charge(t) for t in evictable)
+        if not evictable or coverable < self.page_budget.pages_for(head):
             return None
-        batch = sorted(self.running, key=self._priority)[: self.max_batch]
+        return SuspendAction(evictable[0])
+
+    def _resume_action(self):
+        """Swap suspended tasks back in by MLFQ priority once pages allow."""
+        suspended = sorted([t for t in self.running
+                            if t.suspended
+                            and t.task_id not in self._swap_blocked],
+                           key=self._priority)
+        for t in suspended:
+            need = (self.page_budget.pages_for(t)
+                    - self.page_budget.held_for(t))
+            if need <= self._free_pages():
+                return ResumeAction(t)
+        return None
+
+    def note_suspend_failed(self, task: Task) -> None:
+        """Host arena full: the task stayed resident. Stop proposing it
+        (and retrying in a zero-time loop) until a completion frees host
+        or device space."""
+        self._swap_blocked.add(task.task_id)
+
+    def note_resume_failed(self, task: Task) -> None:
+        """Pool rejected the swap-in (accounting raced, e.g. prefix pins):
+        the task stays suspended; stop retrying until a finish frees pages."""
+        self._swap_blocked.add(task.task_id)
+
+    def next_action(self, now: float):
+        self._prune()
+        if self.waiting:
+            if self.page_budget is None or self._fits(self.waiting[0]):
+                return PrefillAction(self.waiting.pop(0))
+            if self.kv_swap:
+                act = self._swap_action()
+                if act is not None:
+                    return act
+            # defer-only (or swap cannot help): decode what is resident
+        if self.page_budget is not None and self.kv_swap:
+            act = self._resume_action()
+            if act is not None and not self.waiting:
+                return act
+        active = [t for t in self.running if not t.suspended]
+        if not active:
+            return None
+        batch = sorted(active, key=self._priority)[: self.max_batch]
         for t in batch:  # quantum accounting + demotion
             tid = t.task_id
             self.tokens_in_queue[tid] += 1

@@ -163,6 +163,41 @@ def task_selection(tasks: Sequence[Task], lat: LatencyModel,
     return selected, deferred
 
 
+def select_swap_victims(shortfall_pages: int, candidates: Sequence[Task],
+                        budget: PageBudget,
+                        protect: Sequence[Task] = ()) -> List[Task]:
+    """SLICE victim policy for host-offload KV swap (DESIGN.md §7).
+
+    Called when ``PageBudget`` cannot admit a time-feasible REALTIME
+    arrival: pick resident non-realtime tasks to suspend, lowest marginal
+    utility first — utility rate r_i (Eq. 6, through ``effective_utility``
+    so the UtilityAdaptor's preemption policy is respected), ties broken
+    toward tasks holding more pages (fewer victims per admission) — until
+    their held pages cover the shortfall.
+
+    Held pages are an upper bound on what a suspension frees (shared
+    prefix pages stay resident), so a round may under-free; the scheduler
+    replans after each suspension lands and picks up the difference.
+    Returns [] when even suspending every eligible resident would not
+    cover the shortfall: thrashing the swap link without admitting the
+    arrival would be pure loss, so the arrival stays deferred."""
+    protect_ids = {t.task_id for t in protect}
+    resident = [t for t in candidates
+                if not t.slo.realtime and not t.suspended and not t.dropped
+                and not t.finished and t.task_id not in protect_ids
+                and budget.held_for(t) > 0]
+    resident.sort(key=lambda t: (t.utility_rate, -budget.held_for(t),
+                                 t.task_id))
+    victims: List[Task] = []
+    freed = 0
+    for v in resident:
+        if freed >= shortfall_pages:
+            break
+        victims.append(v)
+        freed += budget.held_for(v)
+    return victims if freed >= shortfall_pages else []
+
+
 def prefill_chunk_budget(rates_desc: Sequence[int], lat: LatencyModel,
                          budget_ms: float, chunk_len: int) -> int:
     """Eq. 7 headroom → prefill-chunk token budget for one cycle

@@ -58,6 +58,10 @@ class Task:
     prefill_done_tokens: int = 0       # prompt tokens cached (chunked prefill)
     token_times_ms: list = dataclasses.field(default_factory=list)
     dropped: bool = False
+    # KV swapped to host (DESIGN.md §7): logical length preserved, device
+    # pages released; must be resumed before decoding again. The serving
+    # loop flips this after the executor's suspend/resume actually runs.
+    suspended: bool = False
 
     # dynamic utility (Algorithm 4 UtilityAdaptor may rescale)
     effective_utility: Optional[float] = None

@@ -19,6 +19,11 @@ mesh (see dryrun.py for the lowering proof).
   # paged KV arena via the radix prefix cache
   PYTHONPATH=src python -m repro.launch.serve --executor paged \
       --prefix-cache --shared-prefix-frac 0.7
+
+  # host-offload KV swap (DESIGN.md §7): suspend low-utility residents to
+  # host memory to admit realtime arrivals under page pressure
+  PYTHONPATH=src python -m repro.launch.serve --executor paged \
+      --kv-swap --swap-bw-gbps 8
 """
 from __future__ import annotations
 
@@ -52,6 +57,14 @@ def main():
                     help="paged executor: radix prefix cache — tasks with a "
                          "common page-aligned prompt prefix share physical "
                          "KV pages (DESIGN.md §6)")
+    ap.add_argument("--kv-swap", action="store_true",
+                    help="paged executor: host-offload KV swap (DESIGN.md "
+                         "§7) — SLICE suspends low-utility residents (and "
+                         "FastServe its demoted queues) to host memory to "
+                         "admit arrivals under page pressure")
+    ap.add_argument("--swap-bw-gbps", type=float, default=8.0,
+                    help="device<->host link bandwidth pricing swap "
+                         "transfers in the scheduler's resume headroom")
     ap.add_argument("--shared-prefix-frac", type=float, default=0.0,
                     help="fraction of workload tasks opening with a shared "
                          "system prompt from a per-seed prefix pool")
@@ -83,6 +96,12 @@ def main():
     if args.prefix_cache and args.executor != "paged":
         raise SystemExit("--prefix-cache requires --executor paged "
                          "(sharing rides on the refcounted page pool)")
+    if args.kv_swap and args.executor != "paged":
+        raise SystemExit("--kv-swap requires --executor paged "
+                         "(the slot arena has no page pool to swap from)")
+    if args.kv_swap and args.scheduler == "orca":
+        raise SystemExit("--kv-swap requires --scheduler slice or fastserve "
+                         "(Orca has no preemption policy)")
     page_budget = None
     prefix_hint = None
     n_pages = args.pages or (args.slots * args.max_seq) // args.page_size
@@ -102,6 +121,7 @@ def main():
                          seed=args.seed,
                          prefill_chunk_size=args.prefill_chunk)
     lat = ex.latency_model()
+    lat.swap_bw_gbps = args.swap_bw_gbps
     print(f"engine {cfg.name} ({args.executor}): l(1)={lat.decode_ms(1):.2f}ms "
           f"l({args.slots})={lat.decode_ms(args.slots):.2f}ms")
     # scale the paper's workload SLOs to this engine's speed
@@ -125,24 +145,34 @@ def main():
         t.output_len = min(t.output_len, args.max_seq // 2)
     # Orca/FastServe have no memory model — cap their batch so worst-case
     # residency (prompt cap + output cap per task) fits the engine; only
-    # SLICE gets the live page-budget admission.
+    # SLICE gets the live page-budget admission. With --kv-swap, FastServe
+    # gains its own page budget (peak-reservation admission + proactive
+    # swap), so the worst-case cap would only mask the pressure it manages.
     baseline_batch = args.slots
-    if args.executor == "paged":
+    if args.executor == "paged" and not (args.kv_swap
+                                         and args.scheduler == "fastserve"):
         peak = args.max_seq // 4 + args.max_seq // 2
         baseline_batch = max(1, min(args.slots,
                                     (n_pages * args.page_size) // peak))
     sched = {"slice": lambda: SliceScheduler(lat, page_budget=page_budget,
                                              prefill_chunk=args.prefill_chunk,
-                                             prefix_hint=prefix_hint),
+                                             prefix_hint=prefix_hint,
+                                             kv_swap=args.kv_swap),
              "orca": lambda: OrcaScheduler(max_batch=baseline_batch),
-             "fastserve": lambda: FastServeScheduler(max_batch=baseline_batch),
+             "fastserve": lambda: FastServeScheduler(
+                 max_batch=baseline_batch,
+                 page_budget=page_budget if args.kv_swap else None,
+                 kv_swap=args.kv_swap),
              }[args.scheduler]()
     res = run_serving_loop(sched, ex, tasks, max_ms=3e7)
     s = summarize(res.tasks)
+    swap_note = (f" suspends={res.suspends} resumes={res.resumes} "
+                 f"swapped={res.swapped_bytes / 1e6:.1f}MB"
+                 if args.kv_swap else "")
     print(f"{args.scheduler}: n={s['all'].n} SLO={s['all'].slo:.1%} "
           f"RT={s['realtime'].slo:.1%} nRT={s['non_realtime'].slo:.1%} "
           f"decode_iters={res.decode_iterations} "
-          f"prefill_chunks={res.prefill_chunks}")
+          f"prefill_chunks={res.prefill_chunks}{swap_note}")
 
 
 if __name__ == "__main__":

@@ -25,6 +25,12 @@ see the same prompt. With ``prefix_cache=True`` the paged executor dedups
 shared page-aligned prompt prefixes through a radix index + refcounted
 pages (DESIGN.md §6) — prefill skips the cached prefix, decode reads it
 through the shared page tables, logits unchanged.
+
+Host-offload KV swap (DESIGN.md §7): ``suspend(task)`` moves a resident
+task's private pages to a host-side KVSwapArena (shared prefix pages
+stay resident), ``resume(task)`` brings them back bit-exact. The paged
+executor implements the real transfers (jax.device_get/put); SimExecutor
+prices them through ``LatencyModel.swap_ms`` (the ``swap_bw_gbps`` term).
 """
 from __future__ import annotations
 
@@ -37,6 +43,7 @@ from repro.core.latency_model import LatencyModel, MeasuredLatencyModel
 from repro.core.selection import PageBudget
 from repro.core.task import Task
 from repro.serving.kv_pool import KVPagePool, OutOfPages
+from repro.serving.kv_swap import HostArenaFull, KVSwapArena
 
 
 _PREFILL_PRIOR = [(64, 10.0), (512, 40.0)]   # prefill ms prior until measured
@@ -119,6 +126,18 @@ class Executor:
         """One decode iteration producing one token per task."""
         raise NotImplementedError
 
+    def suspend(self, task: Task) -> float:
+        """Swap a resident task's private KV pages to host memory
+        (DESIGN.md §7), freeing device pages while preserving logical
+        length. The task must be resume()d before it decodes again."""
+        raise NotImplementedError(f"{type(self).__name__} has no KV swap")
+
+    def resume(self, task: Task) -> float:
+        """Bring a suspended task's KV back onto the device. Raises
+        kv_pool.OutOfPages (task stays suspended) when the pool cannot
+        host it right now."""
+        raise NotImplementedError(f"{type(self).__name__} has no KV swap")
+
     def release(self, task: Task) -> None:
         pass
 
@@ -134,6 +153,13 @@ class SimExecutor(Executor):
         self.prefill_steps = 0
         self.chunk_steps = 0
         self._chunk_progress: Dict[int, int] = {}
+        # KV swap accounting (DESIGN.md §7): transfers are priced by the
+        # latency model's swap_bw_gbps term; resident KV is the task's
+        # prompt plus every token decoded so far.
+        self.suspend_count = 0
+        self.resume_count = 0
+        self.swapped_bytes = 0.0
+        self._swapped_tokens: Dict[int, int] = {}
 
     def prefill(self, task: Task) -> float:
         self.prefill_steps += 1
@@ -155,11 +181,64 @@ class SimExecutor(Executor):
         self.decode_steps += 1
         return self.lat.decode_ms(len(tasks)) + self.overhead
 
+    def suspend(self, task: Task) -> float:
+        tid = task.task_id
+        if tid in self._swapped_tokens:
+            raise RuntimeError(f"task {tid} already suspended")
+        n = task.prompt_len + task.tokens_done
+        self._swapped_tokens[tid] = n
+        self.suspend_count += 1
+        self.swapped_bytes += n * self.lat.kv_bytes_per_token
+        return self.lat.swap_ms(n) + self.overhead
+
+    def resume(self, task: Task) -> float:
+        tid = task.task_id
+        if tid not in self._swapped_tokens:
+            raise RuntimeError(f"task {tid} is not suspended")
+        n = self._swapped_tokens.pop(tid)
+        self.resume_count += 1
+        self.swapped_bytes += n * self.lat.kv_bytes_per_token
+        return self.lat.swap_ms(n) + self.overhead
+
     def release(self, task: Task) -> None:
         self._chunk_progress.pop(task.task_id, None)
+        self._swapped_tokens.pop(task.task_id, None)
 
     def latency_model(self) -> LatencyModel:
         return self.lat
+
+
+class PagedSimExecutor(SimExecutor):
+    """SimExecutor + the held-page reporting a paged engine provides
+    (used by benchmarks/kv_swap.py and tests/test_kv_swap.py): prefill
+    pins the task's peak pages — deterministic and conservative, a real
+    engine grows into them — suspend releases them (sim has no sharing,
+    so every page is private), resume re-pins, release frees. ``budget``
+    is the PageBudget to hand the scheduler."""
+
+    def __init__(self, lat: LatencyModel, total_pages: int, page_size: int,
+                 scheduling_overhead_ms: float = 0.0):
+        super().__init__(lat, scheduling_overhead_ms)
+        self.held: Dict[int, int] = {}
+        self.budget = PageBudget(
+            total_pages=total_pages, page_size=page_size,
+            held_pages=lambda t: self.held.get(t.task_id, 0))
+
+    def prefill(self, task: Task) -> float:
+        self.held[task.task_id] = self.budget.pages_for(task)
+        return super().prefill(task)
+
+    def suspend(self, task: Task) -> float:
+        self.held[task.task_id] = 0
+        return super().suspend(task)
+
+    def resume(self, task: Task) -> float:
+        self.held[task.task_id] = self.budget.pages_for(task)
+        return super().resume(task)
+
+    def release(self, task: Task) -> None:
+        self.held.pop(task.task_id, None)
+        super().release(task)
 
 
 class JaxExecutor(Executor):
@@ -446,7 +525,8 @@ class PagedJaxExecutor(Executor):
                  max_batch: int = 16, use_paged_kernel: bool = False,
                  prefill_chunk_size: Optional[int] = None,
                  prefix_cache: bool = False,
-                 prefix_cache_pages: Optional[int] = None):
+                 prefix_cache_pages: Optional[int] = None,
+                 host_arena_bytes: Optional[int] = None):
         import jax
         import jax.numpy as jnp
         from repro.models import model as M
@@ -470,6 +550,10 @@ class PagedJaxExecutor(Executor):
         self.use_paged_kernel = use_paged_kernel
         self.prefill_chunk_size = prefill_chunk_size
         self.pool = KVPagePool(n_pages, page_size)
+        # Host-offload KV swap (DESIGN.md §7): suspended tasks' private
+        # page contents live here until resume; host_arena_bytes models
+        # the edge device's limited host RAM (None = unbounded).
+        self.arena = KVSwapArena(page_size, capacity_bytes=host_arena_bytes)
         # Prefix sharing (DESIGN.md §6): radix index over page-aligned
         # prompt blocks; cache hits share physical pages via pool refcounts.
         self.prefix_cache = None
@@ -739,8 +823,7 @@ class PagedJaxExecutor(Executor):
             total_pages=self.n_pages, page_size=self.page_size,
             prompt_cap=self.max_seq // 2, seq_cap=self.max_seq,
             max_tasks=self.max_batch,
-            held_pages=lambda t: (len(self.pool.page_table(t.task_id))
-                                  if self.pool.holds(t.task_id) else 0),
+            held_pages=lambda t: self.pool.resident_page_count(t.task_id),
             free_pages_now=free_pages_now, prefix_pages=prefix_pages)
 
     # -- ops --
@@ -890,8 +973,80 @@ class PagedJaxExecutor(Executor):
             self.last_tok[i] = int(tok)
         return ms
 
+    # -- host-offload KV swap (DESIGN.md §7) --
+    @property
+    def suspend_count(self) -> int:
+        return self.arena.swap_outs
+
+    @property
+    def resume_count(self) -> int:
+        return self.arena.swap_ins
+
+    @property
+    def swapped_bytes(self) -> float:
+        return float(self.arena.bytes_out + self.arena.bytes_in)
+
+    def _restore_pages(self, positions, entries) -> None:
+        """Scatter host page blobs back into freshly allocated device pages.
+        positions: [(logical_idx, phys)] from pool.swap_in; entries: the
+        arena's [(logical_idx, {"k","v"})] — both ascending by logical."""
+        if not positions:
+            return
+        jnp = self.jnp
+        assert [li for li, _ in positions] == [li for li, _ in entries], (
+            positions, [li for li, _ in entries])
+        idx = jnp.asarray([p for _, p in positions], jnp.int32)
+        k_host = np.stack([blob["k"] for _, blob in entries], axis=1)
+        v_host = np.stack([blob["v"] for _, blob in entries], axis=1)
+        self.pages["k_pages"] = self.pages["k_pages"].at[:, idx].set(
+            jnp.asarray(k_host))
+        self.pages["v_pages"] = self.pages["v_pages"].at[:, idx].set(
+            jnp.asarray(v_host))
+
+    def suspend(self, task: Task) -> float:
+        """Swap the task's private pages to the host arena: gather their
+        device contents (jax.device_get), release them to the pool's free
+        list, keep shared prefix pages resident (their contents were never
+        copied and other owners / the radix index still read them). On
+        HostArenaFull the swap is rolled back — contents restored into
+        re-allocated pages — and the error propagates with the task still
+        resident."""
+        jax, jnp = self.jax, self.jnp
+        tid = task.task_id
+        t0 = time.perf_counter()
+        released = self.pool.swap_out(tid)
+        entries = []
+        if released:
+            # copy IMMEDIATELY after swap_out: the pages are back on the
+            # free list, but nothing re-allocates them before this gather
+            idx = jnp.asarray([p for _, p in released], jnp.int32)
+            k_host = jax.device_get(self.pages["k_pages"][:, idx])
+            v_host = jax.device_get(self.pages["v_pages"][:, idx])
+            entries = [(li, {"k": k_host[:, i], "v": v_host[:, i]})
+                       for i, (li, _) in enumerate(released)]
+        try:
+            self.arena.put(tid, entries)
+        except HostArenaFull:
+            # the released pages are still free (single-threaded, nothing
+            # allocated since), so swap_in cannot fail here
+            self._restore_pages(self.pool.swap_in(tid), entries)
+            raise
+        return (time.perf_counter() - t0) * 1000.0
+
+    def resume(self, task: Task) -> float:
+        """Re-allocate device pages for the swapped-out positions (evicting
+        idle prefix-cache pages under pressure, like any reservation) and
+        restore the host contents. OutOfPages propagates with pool and
+        arena unchanged — the task simply stays suspended."""
+        tid = task.task_id
+        t0 = time.perf_counter()
+        restored = self._reserve(lambda: self.pool.swap_in(tid))
+        self._restore_pages(restored, self.arena.take(tid))
+        return (time.perf_counter() - t0) * 1000.0
+
     def release(self, task: Task) -> None:
         self.pool.free(task.task_id)
+        self.arena.drop(task.task_id)
         self.last_tok.pop(task.task_id, None)
         self._chunk_progress.pop(task.task_id, None)
         self._toks_memo.pop(task.task_id, None)

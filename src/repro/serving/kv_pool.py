@@ -18,6 +18,15 @@ from any single owner's point of view; an owner that must write into one
 first breaks the sharing with ``fork`` (copy-on-write — the caller copies
 the device-side page contents, this class only swaps the bookkeeping).
 
+Pages can also be SWAPPED to host memory (DESIGN.md §7): ``swap_out``
+releases an owner's *private* device pages (the contents go to a
+serving.kv_swap.KVSwapArena) while preserving the owner's logical length
+and keeping its references on shared pages — a shared prefix page is
+never swapped, because other owners (or the prefix cache's pins) still
+need it resident and its contents were never copied to host. ``swap_in``
+re-allocates fresh device pages for exactly the swapped-out positions so
+the executor can restore the contents.
+
 Pure bookkeeping — no jax. The executor owns the physical page arrays
 (``k_pages``/``v_pages``: [L, n_pages, Hkv, page_size, hd]); this class
 owns which page ids belong to which task. A slot array is the degenerate
@@ -46,6 +55,11 @@ class KVPagePool:
         self._len: Dict[int, int] = {}           # owner -> cached tokens
         self._ref: Dict[int, int] = {}           # page -> total refcount
         self._pins: Dict[int, int] = {}          # page -> non-owner retains
+        # swapped owners (DESIGN.md §7): page list with -1 at positions
+        # whose contents live in the host arena; still-resident (shared)
+        # positions keep their page id AND their refcount.
+        self._swapped: Dict[int, List[int]] = {}
+        self._swapped_len: Dict[int, int] = {}
 
     # ---- accounting ----
     def pages_for(self, n_tokens: int) -> int:
@@ -67,10 +81,28 @@ class KVPagePool:
         return list(self._table[owner])
 
     def length(self, owner: int) -> int:
+        if owner in self._swapped_len:
+            return self._swapped_len[owner]
         return self._len[owner]
 
     def holds(self, owner: int) -> bool:
         return owner in self._table
+
+    def is_swapped(self, owner: int) -> bool:
+        return owner in self._swapped
+
+    def swapped_owners(self) -> List[int]:
+        return list(self._swapped)
+
+    def resident_page_count(self, owner: int) -> int:
+        """Device pages an owner holds RIGHT NOW: its full table when
+        resident, only the still-shared pages while swapped out, zero for
+        unknown owners — the held-pages view admission charges."""
+        if owner in self._table:
+            return len(self._table[owner])
+        if owner in self._swapped:
+            return sum(1 for p in self._swapped[owner] if p >= 0)
+        return 0
 
     def ref_count(self, page: int) -> int:
         """Total references (owner table entries + external pins)."""
@@ -88,7 +120,7 @@ class KVPagePool:
     # ---- alloc / extend / free ----
     def alloc(self, owner: int, n_tokens: int) -> List[int]:
         """Reserve pages for a new owner's first n_tokens. Returns page ids."""
-        if owner in self._table:
+        if owner in self._table or owner in self._swapped:
             raise ValueError(f"owner {owner} already holds pages")
         need = self.pages_for(n_tokens)
         if need > len(self._free):
@@ -107,6 +139,8 @@ class KVPagePool:
         newly allocated page ids (possibly empty). Shrinking is a no-op:
         pages are only returned wholesale by free(). On OutOfPages the pool
         (free list, refcounts, tables) is left exactly as it was."""
+        if owner in self._swapped:
+            raise ValueError(f"owner {owner} is swapped out; swap_in first")
         if owner not in self._table:
             raise ValueError(f"owner {owner} holds no pages")
         if new_len <= self._len[owner]:
@@ -130,7 +164,13 @@ class KVPagePool:
         pages = self._table.pop(owner, None)
         self._len.pop(owner, None)
         if pages is None:
-            return 0
+            # a swapped owner still references its shared resident pages;
+            # freeing it drops those (the host-side contents are the
+            # arena's to reclaim — serving.kv_swap)
+            pages = [p for p in self._swapped.pop(owner, []) if p >= 0]
+            self._swapped_len.pop(owner, None)
+            if not pages:
+                return 0
         freed = 0
         for p in pages:
             freed += self._unref(p)
@@ -143,7 +183,7 @@ class KVPagePool:
         tokens, and every page's refcount is incremented. ``n_tokens`` must
         exactly fill the pages (page-aligned prefix, DESIGN.md deviation #5)
         so a later extend() never writes into a shared page mid-stream."""
-        if owner in self._table:
+        if owner in self._table or owner in self._swapped:
             raise ValueError(f"owner {owner} already holds pages")
         if n_tokens != len(pages) * self.page_size:
             raise ValueError(
@@ -164,6 +204,8 @@ class KVPagePool:
         page contents old -> new before writing — or None when the page was
         already private (refcount 1, nothing to do). Raises OutOfPages
         (state unchanged) when no free page is available for the copy."""
+        if owner in self._swapped:
+            raise ValueError(f"owner {owner} is swapped out; swap_in first")
         page = self._table[owner][logical_idx]
         if self._ref[page] <= 1:
             return None
@@ -175,6 +217,58 @@ class KVPagePool:
         self._ref[new] = 1
         self._table[owner][logical_idx] = new
         return page, new
+
+    # ---- host-offload swap (DESIGN.md §7) ----
+    def swap_out(self, owner: int) -> List[Tuple[int, int]]:
+        """Release an owner's PRIVATE pages (refcount 1: no other owner, no
+        index pin) back to the free list, preserving the owner's logical
+        length. Returns [(logical_idx, phys_page)] of the released pages —
+        the caller must copy their device contents to host IMMEDIATELY
+        (before any other pool operation can re-allocate them). Shared
+        pages stay resident with this owner's reference intact: their
+        contents were never copied, so they must survive until swap_in.
+
+        A fully-shared owner swaps out zero pages — suspension is then
+        pure bookkeeping with nothing to transfer."""
+        if owner in self._swapped:
+            raise ValueError(f"owner {owner} already swapped out")
+        if owner not in self._table:
+            raise ValueError(f"owner {owner} holds no pages")
+        pages = self._table.pop(owner)
+        released: List[Tuple[int, int]] = []
+        for idx, p in enumerate(pages):
+            if self._ref[p] == 1:
+                self._unref(p)
+                released.append((idx, p))
+                pages[idx] = -1
+        self._swapped[owner] = pages
+        self._swapped_len[owner] = self._len.pop(owner)
+        return released
+
+    def swap_in(self, owner: int) -> List[Tuple[int, int]]:
+        """Re-allocate device pages for every swapped-out position and make
+        the owner resident again. Returns [(logical_idx, phys_page)] of the
+        fresh pages — the caller must restore the host-side contents into
+        them (same positions swap_out reported). Raises OutOfPages with the
+        pool unchanged when not enough pages are free."""
+        if owner not in self._swapped:
+            raise ValueError(f"owner {owner} is not swapped out")
+        pages = self._swapped[owner]
+        need = sum(1 for p in pages if p < 0)
+        if need > len(self._free):
+            raise OutOfPages(
+                f"swap_in of owner {owner} needs {need} pages, "
+                f"{len(self._free)}/{self.n_pages} free")
+        restored: List[Tuple[int, int]] = []
+        for idx, p in enumerate(pages):
+            if p < 0:
+                fresh = self._free.pop(0)
+                self._ref[fresh] = 1
+                pages[idx] = fresh
+                restored.append((idx, fresh))
+        self._table[owner] = self._swapped.pop(owner)
+        self._len[owner] = self._swapped_len.pop(owner)
+        return restored
 
     def retain_page(self, page: int) -> None:
         """External (non-owner) pin — the prefix cache retaining a page
@@ -212,6 +306,10 @@ class KVPagePool:
         for pages in self._table.values():
             for p in pages:
                 occurrences[p] = occurrences.get(p, 0) + 1
+        for pages in self._swapped.values():
+            for p in pages:
+                if p >= 0:          # still-resident shared pages keep a ref
+                    occurrences[p] = occurrences.get(p, 0) + 1
         allocated = set(self._ref)
         assert allocated.isdisjoint(self._free), "page both free and allocated"
         assert len(allocated) + len(self._free) == self.n_pages, (
@@ -225,3 +323,9 @@ class KVPagePool:
             assert p in allocated, f"pinned page {p} not allocated"
         for o, pages in self._table.items():
             assert len(pages) == self.pages_for(self._len[o]), (o, pages)
+        assert set(self._swapped) == set(self._swapped_len), (
+            set(self._swapped), set(self._swapped_len))
+        assert set(self._swapped).isdisjoint(self._table), (
+            "owner both resident and swapped")
+        for o, pages in self._swapped.items():
+            assert len(pages) == self.pages_for(self._swapped_len[o]), (o, pages)

@@ -6,6 +6,11 @@ when it completes (iteration-granular interruption, matching the paper's
 implementation). The first output token is emitted at prefill completion —
 for chunked prefill (DESIGN.md §5) that is the FINAL chunk's completion, so
 TTFT accounting is identical across atomic and chunked paths.
+
+Host-offload KV swap (DESIGN.md §7): SuspendAction/ResumeAction move a
+task's KV between device and host through the executor; the loop flips
+``Task.suspended`` only after the transfer actually lands, counts both
+directions, and reports the executor's total swapped bytes in LoopResult.
 """
 from __future__ import annotations
 
@@ -13,9 +18,12 @@ import dataclasses
 from typing import List, Optional, Sequence
 
 from repro.core.schedulers import (DecodeAction, PrefillAction,
-                                   PrefillChunkAction, Scheduler)
+                                   PrefillChunkAction, ResumeAction,
+                                   Scheduler, SuspendAction)
 from repro.core.task import Task
 from repro.serving.executor import Executor
+from repro.serving.kv_pool import OutOfPages
+from repro.serving.kv_swap import HostArenaFull
 
 
 @dataclasses.dataclass
@@ -25,6 +33,12 @@ class LoopResult:
     decode_iterations: int
     prefills: int
     prefill_chunks: int = 0
+    # host-offload KV swap accounting (DESIGN.md §7): executed transfers
+    # and the executor's total bytes moved over the host link (both
+    # directions) — surfaced in benchmark JSON (benchmarks/kv_swap.py)
+    suspends: int = 0
+    resumes: int = 0
+    swapped_bytes: float = 0.0
 
 
 def run_serving_loop(scheduler: Scheduler, executor: Executor,
@@ -34,6 +48,7 @@ def run_serving_loop(scheduler: Scheduler, executor: Executor,
     i = 0
     now = 0.0
     n_decode = n_prefill = n_chunks = 0
+    n_suspend = n_resume = 0
     gas = idle_gas
     tracked: List[Task] = []   # delivered, neither finished nor dropped yet
 
@@ -107,6 +122,39 @@ def run_serving_loop(scheduler: Scheduler, executor: Executor,
                 if t.finished:
                     scheduler.on_finish(t, now)
                     executor.release(t)
+        elif isinstance(action, SuspendAction):
+            # KV to host (DESIGN.md §7); the flag flips only once the
+            # executor's transfer actually lands
+            t = action.task
+            try:
+                ms = executor.suspend(t)
+            except HostArenaFull:
+                # executor rolled the swap back: the task stays resident;
+                # the scheduler must stop proposing it (or any victim)
+                # until a completion frees space
+                if hasattr(scheduler, "note_suspend_failed"):
+                    scheduler.note_suspend_failed(t)
+                else:
+                    raise
+            else:
+                now += ms
+                t.suspended = True
+                n_suspend += 1
+        elif isinstance(action, ResumeAction):
+            t = action.task
+            try:
+                ms = executor.resume(t)
+            except OutOfPages:
+                # pool cannot re-host it right now: the task stays
+                # suspended; the scheduler backs it out and replans
+                if hasattr(scheduler, "note_resume_failed"):
+                    scheduler.note_resume_failed(t)
+                else:
+                    raise
+            else:
+                now += ms
+                t.suspended = False
+                n_resume += 1
         elif isinstance(action, DecodeAction):
             ms = executor.decode(action.tasks)
             now += ms
@@ -119,4 +167,7 @@ def run_serving_loop(scheduler: Scheduler, executor: Executor,
         deliver_arrivals(now)
     return LoopResult(tasks=list(arrivals), end_ms=now,
                       decode_iterations=n_decode, prefills=n_prefill,
-                      prefill_chunks=n_chunks)
+                      prefill_chunks=n_chunks,
+                      suspends=n_suspend, resumes=n_resume,
+                      swapped_bytes=float(getattr(executor, "swapped_bytes",
+                                                  0.0)))

@@ -1,9 +1,13 @@
 """SLO attainment metrics (paper §VI-A): TTFT / TPOT / deadline / overall,
-split by real-time vs non-real-time, plus completion times."""
+split by real-time vs non-real-time, plus completion times and tail
+percentiles (p50/p99 TTFT and TPOT — the shared helper every benchmark
+consumes instead of reimplementing percentile math locally)."""
 from __future__ import annotations
 
 import dataclasses
 from typing import Dict, List, Optional, Sequence
+
+import numpy as np
 
 from repro.core.task import Task
 
@@ -11,6 +15,14 @@ from repro.core.task import Task
 def _mean(xs) -> Optional[float]:
     xs = [x for x in xs if x is not None]
     return sum(xs) / len(xs) if xs else None
+
+
+def percentile(xs: Sequence[Optional[float]], q: float) -> Optional[float]:
+    """np.percentile over the non-None entries; None when empty. The one
+    percentile definition shared by Attainment and the benchmarks, so
+    'p99' means the same thing in every table."""
+    xs = [x for x in xs if x is not None]
+    return float(np.percentile(xs, q)) if xs else None
 
 
 @dataclasses.dataclass
@@ -22,6 +34,12 @@ class Attainment:
     deadline: float
     mean_completion_ms: Optional[float]
     mean_tpot_ms: Optional[float]
+    # tail latencies: TTFT over every task that produced a first token,
+    # steady-state TPOT over finished tasks
+    ttft_p50_ms: Optional[float] = None
+    ttft_p99_ms: Optional[float] = None
+    tpot_p50_ms: Optional[float] = None
+    tpot_p99_ms: Optional[float] = None
 
     def row(self) -> Dict[str, float]:
         return dataclasses.asdict(self)
@@ -45,10 +63,14 @@ def summarize(tasks: Sequence[Task]) -> Dict[str, Attainment]:
         tpot = sum(t.tpot_met() for t in ts) / n
         rt = [t for t in ts if t.slo.realtime]
         ddl = (sum(t.slo_met() for t in rt) / len(rt)) if rt else 1.0
+        ttfts = [t.ttft_ms for t in ts]
+        tpots = [t.tpot_measured_ms for t in ts if t.finished]
         out[name] = Attainment(
             n=n, slo=slo, ttft=ttft, tpot=tpot, deadline=ddl,
             mean_completion_ms=_mean([t.completion_ms for t in ts]),
-            mean_tpot_ms=_mean([t.tpot_measured_ms for t in ts if t.finished]),
+            mean_tpot_ms=_mean(tpots),
+            ttft_p50_ms=percentile(ttfts, 50), ttft_p99_ms=percentile(ttfts, 99),
+            tpot_p50_ms=percentile(tpots, 50), tpot_p99_ms=percentile(tpots, 99),
         )
     return out
 

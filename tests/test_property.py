@@ -119,11 +119,14 @@ def test_measured_latency_monotone_inputs_monotone_outputs(points, off):
 @given(st.data())
 @settings(max_examples=80, deadline=None)
 def test_radix_pool_interleavings_no_leaks_no_aliasing(data):
-    """DESIGN.md §6 safety: random interleavings of acquire(match+share) /
-    insert / fork / free / evict on the radix index over a refcounted pool
-    never leak pages and never alias pages across divergent suffixes —
-    every page a match returns (and every page an owner holds) contains
-    exactly the token block its position claims."""
+    """DESIGN.md §6 + §7 safety: random interleavings of
+    acquire(match+share) / insert / fork / swap_out / swap_in / free /
+    evict on the radix index over a refcounted pool never leak pages and
+    never alias pages across divergent suffixes — every page a match
+    returns (and every page an owner holds) contains exactly the token
+    block its position claims, and contents survive a host round-trip
+    (shared/pinned pages never swap; private contents come back at the
+    same logical positions)."""
     from repro.serving.kv_pool import KVPagePool, OutOfPages
     from repro.serving.prefix_cache import RadixPrefixCache
 
@@ -132,10 +135,12 @@ def test_radix_pool_interleavings_no_leaks_no_aliasing(data):
     cache = RadixPrefixCache(pool, max_pages=12)
     shadow = {}          # phys page -> tokens written (partial on last page)
     owners = {}          # owner -> its prompt tokens
+    swapped = {}         # owner -> {logical page idx: host-side tokens}
     next_owner = 0
     token = st.integers(0, 1)   # tiny alphabet forces prefix collisions
     ops = data.draw(st.lists(st.sampled_from(
-        ["new", "free", "fork", "evict", "match"]), min_size=1, max_size=40))
+        ["new", "free", "fork", "evict", "match", "swap_out", "swap_in"]),
+        min_size=1, max_size=40))
     for op in ops:
         if op == "new":
             toks = tuple(data.draw(
@@ -161,10 +166,30 @@ def test_radix_pool_interleavings_no_leaks_no_aliasing(data):
             cache.insert(toks[:nfull * PSZ], tbl[:nfull])
         elif op == "free" and owners:
             o = data.draw(st.sampled_from(sorted(owners)), label="free")
-            pool.free(o)
+            pool.free(o)                    # works resident OR swapped
             del owners[o]
-        elif op == "fork" and owners:
-            o = data.draw(st.sampled_from(sorted(owners)), label="fork")
+            swapped.pop(o, None)
+        elif op == "swap_out" and set(owners) - set(swapped):
+            o = data.draw(st.sampled_from(
+                sorted(set(owners) - set(swapped))), label="swap_out")
+            host = {}
+            for li, p in pool.swap_out(o):  # "device_get" the private pages
+                host[li] = shadow[p]        # page may be reallocated now
+            swapped[o] = host
+        elif op == "swap_in" and swapped:
+            o = data.draw(st.sampled_from(sorted(swapped)), label="swap_in")
+            try:
+                restored = pool.swap_in(o)
+            except OutOfPages:
+                pool.check()                # state unchanged, stays swapped
+                continue
+            host = swapped.pop(o)
+            assert sorted(li for li, _ in restored) == sorted(host)
+            for li, p in restored:          # "device_put" back
+                shadow[p] = host[li]
+        elif op == "fork" and set(owners) - set(swapped):
+            o = data.draw(st.sampled_from(
+                sorted(set(owners) - set(swapped))), label="fork")
             tbl = pool.page_table(o)
             li = data.draw(st.integers(0, len(tbl) - 1), label="page")
             try:
@@ -184,6 +209,10 @@ def test_radix_pool_interleavings_no_leaks_no_aliasing(data):
                 assert shadow[p] == toks[i * PSZ:(i + 1) * PSZ]
         pool.check()
         for o, toks in owners.items():      # owners see only their tokens
+            if o in swapped:                # host copy must carry them
+                for li, got in swapped[o].items():
+                    assert got == toks[li * PSZ: li * PSZ + len(got)]
+                continue
             for li, p in enumerate(pool.page_table(o)):
                 got = shadow[p]
                 assert got == toks[li * PSZ: li * PSZ + len(got)]
