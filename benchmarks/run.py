@@ -43,6 +43,10 @@ GATES = [
     ("kv_swap", ("sim", "swap", "rt_ttft_p99_ms"), "low", 0.10),
     ("kv_swap", ("sim", "swap", "rt_slo"), "high", 0.05),
     ("kv_swap", ("sim", "ttft_p99_improvement"), "high", 0.10),
+    ("spec_decode", ("sim", "spec", "rt_tpot_p99_ms"), "low", 0.10),
+    ("spec_decode", ("sim", "spec", "rt_slo"), "high", 0.05),
+    ("spec_decode", ("sim", "spec", "slo"), "high", 0.05),
+    ("spec_decode", ("sim", "rt_tpot_p99_improvement"), "high", 0.10),
 ]
 
 
@@ -114,8 +118,8 @@ def main() -> None:
     ap.add_argument("--skip-engine", action="store_true",
                     help="skip real-JAX-engine measurements (faster)")
     ap.add_argument("--only", default=None,
-                    help="comma-separated subset: "
-                         "fig1,table2,fig7,fig10,fig11,kv,prefill,prefix,swap")
+                    help="comma-separated subset: fig1,table2,fig7,fig10,"
+                         "fig11,kv,prefill,prefix,swap,spec")
     ap.add_argument("--tiny", action="store_true",
                     help="CI smoke configs for the benches that have one")
     ap.add_argument("--check", action="store_true",
@@ -133,8 +137,8 @@ def main() -> None:
 
     from benchmarks import (dynamic_slo, kv_pressure, kv_swap,
                             latency_vs_batch, prefill_interference,
-                            prefix_sharing, ratio_sweep, static_tpot,
-                            workload_sweep)
+                            prefix_sharing, ratio_sweep, spec_decode,
+                            static_tpot, workload_sweep)
 
     print("name,value,derived")
     t0 = time.time()
@@ -157,6 +161,8 @@ def main() -> None:
         prefix_sharing.run(tiny=args.tiny, engine=not args.skip_engine)
     if only is None or "swap" in only:
         kv_swap.run(tiny=args.tiny, engine=not args.skip_engine)
+    if only is None or "spec" in only:
+        spec_decode.run(tiny=args.tiny, engine=not args.skip_engine)
     print(f"total_wall_s,{time.time() - t0:.1f},", flush=True)
 
     ran = {"prefill_interference"} if only is None or "prefill" in only else set()
@@ -164,6 +170,8 @@ def main() -> None:
         ran.add("prefix_sharing")
     if only is None or "swap" in only:
         ran.add("kv_swap")
+    if only is None or "spec" in only:
+        ran.add("spec_decode")
     if args.update_baselines:
         update_baselines(sorted(ran & set(_gated_benches())))
     if args.check:

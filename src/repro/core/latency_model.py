@@ -30,8 +30,41 @@ class LatencyModel:
     kv_bytes_per_token: float = 28672.0
     swap_overhead_ms: float = 0.2          # per-transfer launch/pinning cost
 
+    # Speculative-decode pricing (DESIGN.md §8): decode on the edge device
+    # is memory-bound (weight streaming dominates), so verifying k extra
+    # query positions in one step costs a small per-token compute
+    # increment on top of l(b) — the weights stream either way — and the
+    # default draft (the target cut to one layer, spec_decode.py) prices
+    # a draft step near 1/n_layers of the target's: ~1/28 for the paper's
+    # ChatGLM2-6B testbed, padded for embed/unembed overhead. Plain
+    # attributes (like the swap terms) so a deployment can calibrate them
+    # on any model instance.
+    draft_ms_frac: float = 0.08            # one draft step vs l(b)
+    verify_token_frac: float = 0.04        # marginal verify query vs l(b)
+    spec_accept_rate: float = 0.8          # modeled per-token acceptance
+                                           # (SimExecutor's expectation)
+
     def decode_ms(self, batch: int) -> float:
         raise NotImplementedError
+
+    def draft_ms(self, batch: int, depth: int) -> float:
+        """Cost of drafting ``depth`` tokens autoregressively for a batch
+        (the draft model steps the whole batch in lockstep)."""
+        if depth <= 0:
+            return 0.0
+        return depth * self.draft_ms_frac * self.decode_ms(batch)
+
+    def verify_ms(self, batch: int, depth: int) -> float:
+        """One verify step over windows of up to depth+1 query positions:
+        the base decode iteration plus the marginal multi-query compute."""
+        return self.decode_ms(batch) * (1.0 + self.verify_token_frac
+                                        * max(depth, 0))
+
+    def spec_token_ms(self, batch: int) -> float:
+        """Marginal cost of ONE speculative token at batch size b — what a
+        unit of the scheduler's Eq. 7 depth budget spends
+        (selection.spec_depth_budget)."""
+        return (self.draft_ms_frac + self.verify_token_frac) * self.decode_ms(batch)
 
     def prefill_ms(self, prompt_len: int) -> float:
         raise NotImplementedError

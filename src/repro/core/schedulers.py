@@ -3,8 +3,10 @@
 The serving loop (repro.serving.loop) drives a scheduler with:
     on_arrival(task, now) / on_finish(task, now)
     next_action(now) -> PrefillAction | DecodeAction | None
-Each DecodeAction is ONE decode iteration (one token for every task in the
-batch) — Orca-style iteration-level scheduling for all three policies; they
+Each DecodeAction is ONE decode iteration — one token for every task in
+the batch, or, with speculative depths attached (DESIGN.md §8), up to
+depth+1 tokens for the tasks the SLICE depth budget accelerates —
+Orca-style iteration-level scheduling for all three policies; they
 differ in admission and batch composition.
 """
 from __future__ import annotations
@@ -21,7 +23,7 @@ from repro.core.mask_matrix import (build_mask_matrix, column_batches,
                                     stagger_columns)
 from repro.core.selection import (PERIOD_BUDGET_MS, PageBudget,
                                   prefill_chunk_budget, select_swap_victims,
-                                  task_selection)
+                                  spec_depth_budget, task_selection)
 from repro.core.task import Task
 
 
@@ -60,6 +62,12 @@ class PrefillChunkAction:
 @dataclasses.dataclass
 class DecodeAction:
     tasks: List[Task]
+    # Per-task speculation depths (DESIGN.md §8): None = classic one-token
+    # decode. With depths, the executor drafts up to depths[i] tokens per
+    # task and commits the greedy-accepted prefix plus a bonus token in a
+    # single iteration — the scheduler's per-request generation-rate
+    # actuator.
+    depths: Optional[List[int]] = None
 
 
 class Scheduler:
@@ -97,9 +105,24 @@ class SliceScheduler(Scheduler):
                  page_budget: Optional[PageBudget] = None,
                  prefill_chunk: Optional[int] = None,
                  prefix_hint: Optional[Callable[[Task], int]] = None,
-                 kv_swap: bool = False):
+                 kv_swap: bool = False,
+                 spec_decode: bool = False, max_spec_depth: int = 4):
         self.lat = lat
         self.budget_ms = budget_ms
+        # Speculative decoding (DESIGN.md §8): each replan prices a per-
+        # cycle speculative-token budget out of the Eq. 7 headroom
+        # (selection.spec_depth_budget) and hands per-request depths to
+        # the lagging/realtime tasks first — depth is the scheduler's
+        # generation-RATE actuator, where admission is its WHO actuator.
+        # Depth 0 (plain decode) whenever headroom is tight, so the
+        # delivered cycle never overruns. Spent tokens carry across
+        # reschedules like the delivered credit; a fresh cycle resets.
+        self.spec_decode = spec_decode
+        self.max_spec_depth = max_spec_depth
+        self.depth_of: dict = {}           # task_id -> granted depth
+        self._spec_budget_tokens = 0
+        self._spec_spent = 0
+        self._seen_realtime = False
         # Host-offload KV swap (DESIGN.md §7): when PageBudget cannot admit
         # a time-feasible realtime arrival, suspend the lowest-marginal-
         # utility non-realtime residents (selection.select_swap_victims) to
@@ -159,6 +182,8 @@ class SliceScheduler(Scheduler):
     def on_arrival(self, task: Task, now: float) -> None:
         self.pool.append(task)
         self.need_resched = True
+        if task.slo.realtime:
+            self._seen_realtime = True
         self._arr_times.append(now)
         self._arr_times = self._arr_times[-32:]
         p = self.lat.prefill_ms(task.prompt_len)
@@ -328,7 +353,111 @@ class SliceScheduler(Scheduler):
                            reverse=True)
             self._chunk_budget_tokens = prefill_chunk_budget(
                 rates, self.lat, self.budget_ms, self.prefill_chunk)
+        if self.spec_decode:
+            self._assign_spec_depths(now)
         self.need_resched = False
+
+    # -- speculative decoding (DESIGN.md §8) --
+    def _slo_headroom_ms(self, t: Task, now: float) -> float:
+        """How much schedule slack the task has before its SLO breaks —
+        the Eq. 7-style pricing that ranks depth grants. Realtime: the
+        deadline budget left after the remaining tokens are served at the
+        SLO rate (negative = already lagging). Non-realtime: the TPOT
+        margin accumulated so far, scaled over the remaining tokens."""
+        remaining_toks = max(0, t.output_len - t.tokens_done)
+        if t.slo.realtime and t.slo.deadline_ms is not None:
+            remaining_ms = t.slo.deadline_ms - (now - t.arrival_ms)
+            return remaining_ms - remaining_toks * t.slo.tpot_ms
+        measured = t.tpot_measured_ms
+        if measured is None:
+            return float("inf")            # no evidence of lagging yet
+        return (t.slo.tpot_ms - measured) * max(remaining_toks, 1)
+
+    def _assign_spec_depths(self, now: float) -> None:
+        """Grant per-request speculation depth out of the cycle's Eq. 7
+        headroom. Only LAGGING tasks get depth — comfortable ones stay at
+        depth 0 and donate their compute, because a speculative window
+        slows its whole decode column (draft + multi-query verify premium)
+        for every co-batched task, so indiscriminate grants trade everyone
+        else's inter-token gaps for nothing. Realtime tasks whose deadline
+        headroom has shrunk below a quarter cycle are served most-lagging
+        first; non-realtime tasks speculate only in workloads where no
+        realtime task has ever arrived (any realtime presence reserves the
+        actuator — measured in EXPERIMENTS.md §Speculative-decoding).
+        Each budget unit is one speculative token (draft + marginal
+        verify, lat.spec_token_ms); a task decoding v times per cycle at
+        depth d spends ~d*v units, so grants scale by the task's
+        remaining per-cycle quota."""
+        self.depth_of = {}
+        rates = sorted((quantized_rate(t.slo.tpot_ms) for t in self.batch),
+                       reverse=True)
+        # chunked prefill claims Eq. 7 slack too (prefill_chunk_budget is
+        # sized to the FULL slack): charge its outstanding token budget
+        # against the cycle before pricing speculation, or enabling both
+        # actuators would let one cycle spend ~2x the slack and overrun
+        # the TPOT budget the mask matrix guarantees
+        budget_ms = self.budget_ms
+        if self.prefill_chunk is not None:
+            outstanding = max(0, self._chunk_budget_tokens
+                              - self._chunk_spent_tokens)
+            budget_ms -= (outstanding * self.lat.prefill_ms(self.prefill_chunk)
+                          / max(self.prefill_chunk, 1))
+        self._spec_budget_tokens = spec_depth_budget(
+            rates, self.lat, budget_ms, self.max_spec_depth)
+        remaining = self._spec_budget_tokens - self._spec_spent
+        if remaining <= 0:
+            return
+        if self._seen_realtime:
+            # any realtime presence reserves speculation for realtime:
+            # even an RT-free batch must keep its iterations fast, or the
+            # next RT arrival waits out a slowed speculative column
+            lagging = [t for t in self.batch if t.slo.realtime
+                       and self._slo_headroom_ms(t, now)
+                       < 0.25 * self.budget_ms]
+        else:
+            lagging = [t for t in self.batch
+                       if self._slo_headroom_ms(t, now) < 0.0]
+        lagging.sort(key=lambda t: self._slo_headroom_ms(t, now))
+        for t in lagging:
+            if remaining <= 0:
+                break
+            v = max(1, quantized_rate(t.slo.tpot_ms)
+                    - self.delivered.get(t.task_id, 0))
+            d = min(self.max_spec_depth, remaining // v,
+                    max(0, t.output_len - t.tokens_done - 1))
+            if d <= 0:
+                continue
+            self.depth_of[t.task_id] = int(d)
+            remaining -= int(d) * v
+
+    def _column_depths(self, tasks: List[Task]) -> Optional[List[int]]:
+        """Depths for one decode column, spending the cycle's speculative-
+        token budget; None when nothing speculates (the loop then takes
+        the classic one-token path, byte-identical to pre-spec builds)."""
+        if not self.depth_of:
+            return None
+        left = self._spec_budget_tokens - self._spec_spent
+        if left <= 0:
+            return None
+        depths = []
+        for t in tasks:
+            d = min(self.depth_of.get(t.task_id, 0), left,
+                    max(0, t.output_len - t.tokens_done - 1))
+            left -= d
+            depths.append(d)
+        if not any(depths):
+            return None
+        self._spec_spent += sum(depths)
+        return depths
+
+    def note_decoded(self, task: Task, n: int) -> None:
+        """Spec-decode feedback: the executor committed ``n`` tokens for
+        this task in one iteration. The column scan already credited one;
+        the extra n-1 join the cycle's delivered credit so the task's
+        quota depletes faster and the rebuilt mask never over-serves it."""
+        if n > 1:
+            self.delivered[task.task_id] = (
+                self.delivered.get(task.task_id, 0) + n - 1)
 
     def _build_mask(self, remaining: bool) -> None:
         """Rebuild the decode-mask matrix; with remaining=True, row quotas are
@@ -353,6 +482,7 @@ class SliceScheduler(Scheduler):
     def _new_cycle(self) -> None:
         self.delivered = {}
         self._chunk_spent_tokens = 0
+        self._spec_spent = 0
         self._build_mask(remaining=False)
 
     def _next_decode_action(self):
@@ -379,6 +509,8 @@ class SliceScheduler(Scheduler):
             if tasks:
                 for t in tasks:
                     self.delivered[t.task_id] = self.delivered.get(t.task_id, 0) + 1
+                if self.spec_decode:
+                    return DecodeAction(tasks, self._column_depths(tasks))
                 return DecodeAction(tasks)
         return None
 
@@ -613,6 +745,14 @@ class FastServeScheduler(Scheduler):
         """Pool rejected the swap-in (accounting raced, e.g. prefix pins):
         the task stays suspended; stop retrying until a finish frees pages."""
         self._swap_blocked.add(task.task_id)
+
+    def note_decoded(self, task: Task, n: int) -> None:
+        """k-tokens-per-iteration generalization (DESIGN.md §8): MLFQ
+        quantum accounting charges every committed token, not every
+        iteration — next_action already charged one, the extra n-1 land
+        here (demotion itself is re-checked on the next action)."""
+        if n > 1 and task.task_id in self.tokens_in_queue:
+            self.tokens_in_queue[task.task_id] += n - 1
 
     def next_action(self, now: float):
         self._prune()

@@ -218,6 +218,31 @@ def prefill_chunk_budget(rates_desc: Sequence[int], lat: LatencyModel,
     return int(slack_ms * chunk_len / per_chunk_ms)
 
 
+def spec_depth_budget(rates_desc: Sequence[int], lat: LatencyModel,
+                      budget_ms: float, max_depth: int) -> int:
+    """Eq. 7 headroom → speculative-token budget for one cycle
+    (DESIGN.md §8), mirroring ``prefill_chunk_budget``.
+
+    The decode-mask matrix consumes ``estimate_period_ms(rates)`` of the
+    cycle; the remaining slack may be spent accelerating lagging requests
+    with draft-verify windows. Each unit of the budget is ONE speculative
+    token — a draft step plus a marginal verify query — priced at the
+    batch size the cycle actually runs (``lat.spec_token_ms``), so the
+    *delivered* cycle stays under budget whatever depths the scheduler
+    hands out. Returns 0 when the cycle is already full: depth 0 (plain
+    decode) is the tight-headroom behavior, never an overrun.
+    """
+    if max_depth <= 0 or not rates_desc:
+        return 0
+    slack_ms = budget_ms - estimate_period_ms(rates_desc, lat)
+    if slack_ms <= 0.0:
+        return 0
+    per_tok_ms = lat.spec_token_ms(len(rates_desc))
+    if per_tok_ms <= 0.0:
+        return 10 ** 9
+    return int(slack_ms / per_tok_ms)
+
+
 def selection_feasible(selected: Sequence[Task], lat: LatencyModel,
                        budget_ms: float = PERIOD_BUDGET_MS) -> bool:
     rates = sorted((quantized_rate(t.slo.tpot_ms) for t in selected),

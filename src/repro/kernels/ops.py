@@ -50,6 +50,17 @@ def paged_decode_attention(q, k_pages, v_pages, page_table, q_pos, *,
         interpret=_auto_interpret(interpret))
 
 
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_verify_attention(q, k_pages, v_pages, page_table, q_start, *,
+                           interpret: Optional[bool] = None):
+    """Multi-query paged verify attention for speculative decoding
+    (DESIGN.md §8): C queries per sequence at positions q_start[b]+i over
+    the paged KV arena. Shapes are page-aligned by construction."""
+    return _pa.paged_verify_attention_kernel(
+        q, k_pages, v_pages, page_table, q_start,
+        interpret=_auto_interpret(interpret))
+
+
 @functools.partial(jax.jit, static_argnames=("causal", "window", "qblk",
                                              "kblk", "interpret"))
 def flash_prefill(q, k, v, *, causal: bool = True, window=None,

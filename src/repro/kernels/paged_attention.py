@@ -71,6 +71,103 @@ def _kernel(pt_ref, qpos_ref, q_ref, k_ref, v_ref, o_ref,
                        jnp.maximum(l_ref[:, :1], 1e-30)).astype(o_ref.dtype)
 
 
+def _verify_kernel(pt_ref, qpos_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, page_size, groups, scale):
+    """Multi-query generalization of ``_kernel``: R = C*groups query rows
+    per (b, h) block, row r at logical position q_start[b] + r // groups —
+    the causal staircase of a speculative verify window (DESIGN.md §8)."""
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    nj = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # [R, hd]
+    k = k_ref[0, 0].astype(jnp.float32)          # [psz, hd]
+    v = v_ref[0, 0].astype(jnp.float32)          # [psz, hd]
+    qp = qpos_ref[b]                             # first query's position
+    page = pt_ref[b, j]                          # physical page id, -1 unused
+    R = q.shape[0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    pos = j * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (R, page_size), 1)            # logical KV position
+    row_pos = qp + jax.lax.broadcasted_iota(
+        jnp.int32, (R, page_size), 0) // groups  # this row's query position
+    keep = (page >= 0) & (pos <= row_pos)        # [R, psz]
+    s = jnp.where(keep, s, NEG_INF)
+
+    m_prev = m_ref[:, :1]
+    l_prev = l_ref[:, :1]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    # fully-masked page: m_new == NEG_INF makes exp(s - m_new) == 1 for
+    # masked lanes — re-mask so they contribute nothing.
+    p = jnp.where(keep, p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, -1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(j == nj - 1)
+    def _fin():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[:, :1], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_verify_attention_kernel(q, k_pages, v_pages, page_table, q_start,
+                                  interpret: bool = False):
+    """q: [B,C,Hq,hd] — C verify queries at positions q_start[b]+i;
+    k/v_pages: [P,Hkv,psz,hd]; page_table: [B,maxp] int32 (-1 = unused);
+    q_start: [B] int32. Returns [B,C,Hq,hd]. Same contract as
+    layers.paged_verify_attention (the jnp oracle)."""
+    B, C, Hq, hd = q.shape
+    _, Hkv, psz, _ = k_pages.shape
+    maxp = page_table.shape[1]
+    g = Hq // Hkv
+    R = C * g
+    qg = (q.reshape(B, C, Hkv, g, hd)
+          .transpose(0, 2, 1, 3, 4).reshape(B, Hkv, R, hd))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, maxp),
+        in_specs=[
+            pl.BlockSpec((1, 1, R, hd), lambda b, h, j, pt, qp: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, psz, hd),
+                         lambda b, h, j, pt, qp: (jnp.maximum(pt[b, j], 0),
+                                                  h, 0, 0)),
+            pl.BlockSpec((1, 1, psz, hd),
+                         lambda b, h, j, pt, qp: (jnp.maximum(pt[b, j], 0),
+                                                  h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, R, hd),
+                               lambda b, h, j, pt, qp: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((R, 128), jnp.float32),   # running max
+            pltpu.VMEM((R, 128), jnp.float32),   # running denom
+            pltpu.VMEM((R, hd), jnp.float32),    # running numerator
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_verify_kernel, page_size=psz, groups=g,
+                          scale=hd ** -0.5),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, R, hd), q.dtype),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), q_start.astype(jnp.int32),
+      qg, k_pages, v_pages)
+    return (out.reshape(B, Hkv, C, g, hd)
+            .transpose(0, 2, 1, 3, 4).reshape(B, C, Hq, hd))
+
+
 def paged_decode_attention_kernel(q, k_pages, v_pages, page_table, q_pos,
                                   interpret: bool = False):
     """q: [B,Hq,hd]; k/v_pages: [P,Hkv,psz,hd]; page_table: [B,maxp] int32

@@ -7,7 +7,8 @@ from typing import Optional
 import jax.numpy as jnp
 
 from repro.models.layers import (attention, band_mask, decode_attention,
-                                 paged_decode_attention)
+                                 paged_decode_attention,
+                                 paged_verify_attention)
 from repro.models.ssm import ssd_chunked
 
 
@@ -21,6 +22,13 @@ def paged_decode_attention_ref(q, k_pages, v_pages, page_table, q_pos):
     gather each sequence's pages into a contiguous view, then run the dense
     decode-attention oracle over it."""
     return paged_decode_attention(q, k_pages, v_pages, page_table, q_pos)
+
+
+def paged_verify_attention_ref(q, k_pages, v_pages, page_table, q_start):
+    """Same contract as kernels.paged_attention.paged_verify_attention_kernel:
+    C verify queries per sequence (positions q_start[b]+i) over the gathered
+    page view — the k-query generalization of the paged decode oracle."""
+    return paged_verify_attention(q, k_pages, v_pages, page_table, q_start)
 
 
 def flash_prefill_ref(q, k, v, causal=True, window=None):

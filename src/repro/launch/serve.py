@@ -24,6 +24,12 @@ mesh (see dryrun.py for the lowering proof).
   # host memory to admit realtime arrivals under page pressure
   PYTHONPATH=src python -m repro.launch.serve --executor paged \
       --kv-swap --swap-bw-gbps 8
+
+  # speculative decoding (DESIGN.md §8): a tiny draft model proposes
+  # per-request windows the target verifies in one step — lagging
+  # realtime requests get multiple tokens per iteration
+  PYTHONPATH=src python -m repro.launch.serve --executor paged \
+      --spec-decode --spec-depth 4 [--draft-config smollm-360m]
 """
 from __future__ import annotations
 
@@ -65,6 +71,19 @@ def main():
     ap.add_argument("--swap-bw-gbps", type=float, default=8.0,
                     help="device<->host link bandwidth pricing swap "
                          "transfers in the scheduler's resume headroom")
+    ap.add_argument("--spec-decode", action="store_true",
+                    help="paged executor + SLICE: speculative decoding "
+                         "(DESIGN.md §8) — a draft model proposes per-"
+                         "request token windows, the target verifies them "
+                         "in one step, lagging realtime requests commit "
+                         "multiple tokens per iteration")
+    ap.add_argument("--spec-depth", type=int, default=4,
+                    help="max speculation depth (draft tokens per verify "
+                         "window)")
+    ap.add_argument("--draft-config", default=None,
+                    help="registry arch for the draft model (reduced, "
+                         "reshaped to the target vocab); default: the "
+                         "target architecture cut to one layer")
     ap.add_argument("--shared-prefix-frac", type=float, default=0.0,
                     help="fraction of workload tasks opening with a shared "
                          "system prompt from a per-seed prefix pool")
@@ -102,17 +121,30 @@ def main():
     if args.kv_swap and args.scheduler == "orca":
         raise SystemExit("--kv-swap requires --scheduler slice or fastserve "
                          "(Orca has no preemption policy)")
+    if args.spec_decode and args.executor != "paged":
+        raise SystemExit("--spec-decode requires --executor paged "
+                         "(the verify window rides the paged KV arena)")
+    if args.spec_decode and args.scheduler != "slice":
+        raise SystemExit("--spec-decode requires --scheduler slice "
+                         "(depth grants come from the Eq. 7 headroom)")
     page_budget = None
     prefix_hint = None
     n_pages = args.pages or (args.slots * args.max_seq) // args.page_size
     if args.executor == "paged":
+        draft_cfg = None
+        if args.spec_decode and args.draft_config is not None:
+            from repro.serving.spec_decode import draft_config_from_registry
+            draft_cfg = draft_config_from_registry(args.draft_config, cfg)
         ex = PagedJaxExecutor(cfg, n_pages=n_pages,
                               page_size=args.page_size,
                               max_seq=args.max_seq, seed=args.seed,
                               max_batch=args.slots,
                               use_paged_kernel=args.paged_kernel,
                               prefill_chunk_size=args.prefill_chunk,
-                              prefix_cache=args.prefix_cache)
+                              prefix_cache=args.prefix_cache,
+                              spec_decode=args.spec_decode,
+                              draft_cfg=draft_cfg,
+                              max_spec_depth=args.spec_depth)
         page_budget = ex.page_budget()
         if args.prefix_cache:
             prefix_hint = ex.cached_prompt_tokens
@@ -157,7 +189,9 @@ def main():
     sched = {"slice": lambda: SliceScheduler(lat, page_budget=page_budget,
                                              prefill_chunk=args.prefill_chunk,
                                              prefix_hint=prefix_hint,
-                                             kv_swap=args.kv_swap),
+                                             kv_swap=args.kv_swap,
+                                             spec_decode=args.spec_decode,
+                                             max_spec_depth=args.spec_depth),
              "orca": lambda: OrcaScheduler(max_batch=baseline_batch),
              "fastserve": lambda: FastServeScheduler(
                  max_batch=baseline_batch,
@@ -169,10 +203,13 @@ def main():
     swap_note = (f" suspends={res.suspends} resumes={res.resumes} "
                  f"swapped={res.swapped_bytes / 1e6:.1f}MB"
                  if args.kv_swap else "")
+    spec_note = (f" spec_extra={res.spec_extra_tokens} "
+                 f"accepted={res.accepted_tokens}/{res.drafted_tokens}"
+                 if args.spec_decode else "")
     print(f"{args.scheduler}: n={s['all'].n} SLO={s['all'].slo:.1%} "
           f"RT={s['realtime'].slo:.1%} nRT={s['non_realtime'].slo:.1%} "
           f"decode_iters={res.decode_iterations} "
-          f"prefill_chunks={res.prefill_chunks}{swap_note}")
+          f"prefill_chunks={res.prefill_chunks}{swap_note}{spec_note}")
 
 
 if __name__ == "__main__":

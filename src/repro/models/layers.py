@@ -223,6 +223,30 @@ def paged_decode_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
     return decode_attention(q, kc, vc, kv_pos, q_pos)
 
 
+def paged_verify_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
+                           v_pages: jnp.ndarray, page_table: jnp.ndarray,
+                           q_start: jnp.ndarray) -> jnp.ndarray:
+    """Multi-token verify attention over a PAGED KV cache: the k-query
+    generalization of ``paged_decode_attention`` (pure-jnp oracle for the
+    Pallas kernel in repro.kernels.paged_attention), used by speculative
+    decoding's draft-verify step (DESIGN.md §8).
+
+    q: [B,C,Hq,hd] — the C=depth+1 verify queries, RoPE'd at absolute
+    positions ``q_start[b]+i``; k/v_pages: [P,Hkv,psz,hd] with the verify
+    window's own KV already scattered in; page_table: [B,maxp] physical
+    page per logical page, -1 = unused; q_start: [B] position of the first
+    verify query. Query i attends over logical positions 0..q_start+i
+    (causal within the speculative window, full prefix before it).
+    """
+    psz = k_pages.shape[2]
+    C = q.shape[1]
+    kc = gather_pages(k_pages, page_table)
+    vc = gather_pages(v_pages, page_table)
+    kv_pos = paged_kv_positions(page_table, psz)
+    q_pos = q_start[:, None] + jnp.arange(C, dtype=q_start.dtype)
+    return chunk_decode_attention(q, kc, vc, kv_pos, q_pos)
+
+
 # ---------------------------------------------------------------- MLP
 
 def gated_mlp(x: jnp.ndarray, wg: jnp.ndarray, wu: jnp.ndarray,

@@ -417,6 +417,72 @@ def prefill_chunk_paged(cfg: ArchConfig, params: Params, pages: Cache,
                                             "v_pages": new_layer_pages["v"]}
 
 
+# ------------------------------------------------------- speculative verify
+
+def verify_step_paged(cfg: ArchConfig, params: Params, pages: Cache,
+                      page_table: jnp.ndarray, lengths: jnp.ndarray,
+                      tokens: jnp.ndarray,
+                      opts: ModelOptions = ModelOptions(),
+                      use_kernel: bool = False) -> Tuple[jnp.ndarray, Cache]:
+    """Multi-token draft-verify step over the paged KV arena (DESIGN.md §8).
+
+    tokens: [B,C] — the last committed token followed by C-1 draft tokens,
+    appended at logical positions ``lengths[b]+i``; the page table must
+    already cover lengths+C tokens (the pool extends BEFORE the step; the
+    caller rolls back pages for rejected drafts with pool.truncate after
+    acceptance). The window's KV is scattered into its pages, then every
+    query attends over the gathered page view with the causal staircase
+    (query i sees positions 0..lengths[b]+i) — or the Pallas
+    ``paged_verify_attention`` kernel with ``use_kernel=True``.
+
+    Returns (logits [B,C,V], new pages): logits[:, i] is the target model's
+    next-token distribution AFTER consuming token i of the window — the
+    acceptance test compares argmax(logits[:, i]) against draft i+1
+    (greedy equivalence). This is ``prefill_chunk_paged`` generalized to
+    return every position's logits instead of only the last — pad rows
+    (page_table all -1) scatter nothing and produce garbage logits the
+    caller ignores, exactly like inactive decode rows.
+    """
+    assert cfg.causal and cfg.has_attention and not cfg.has_ssm
+    B, C = tokens.shape
+    n_pages, psz = pages["k_pages"].shape[1], pages["k_pages"].shape[3]
+    x = params["embed"][tokens]                    # [B,C,D]
+    q_pos = lengths[:, None] + jnp.arange(C, dtype=lengths.dtype)  # [B,C]
+    logical = q_pos // psz
+    off = q_pos % psz
+    barr = jnp.arange(B)[:, None]
+    pt_row = page_table[barr, logical]             # [B,C] phys page per token
+    # out-of-bounds index => scatter dropped (untabled rows)
+    phys = jnp.where(pt_row >= 0, pt_row, n_pages)
+
+    def body(x, xs):
+        bp, lc = xs
+        kp, vp = lc["k"], lc["v"]                  # [P,Hkv,psz,hd]
+        h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
+        q = (h @ bp["wq"]).reshape(B, C, cfg.n_heads, cfg.head_dim)
+        k = (h @ bp["wk"]).reshape(B, C, cfg.n_kv_heads, cfg.head_dim)
+        v = (h @ bp["wv"]).reshape(B, C, cfg.n_kv_heads, cfg.head_dim)
+        q = shard(L.apply_rope(q, q_pos, cfg.rope_theta), ("b", None, "m", None))
+        k = L.apply_rope(k, q_pos, cfg.rope_theta)
+        kp = kp.at[phys, :, off].set(k, mode="drop")
+        vp = vp.at[phys, :, off].set(v, mode="drop")
+        if use_kernel:
+            from repro.kernels import ops as _kops
+            a = _kops.paged_verify_attention(q, kp, vp, page_table, lengths)
+        else:
+            a = L.paged_verify_attention(q, kp, vp, page_table, lengths)
+        x = x + a.reshape(B, C, cfg.q_dim) @ bp["wo"]
+        f_out, _ = _ffn(cfg, bp, x, "dense" if cfg.block_kind != "moe"
+                        else opts.moe_impl)
+        return x + f_out, {"k": kp, "v": vp}
+
+    layer_pages = {"k": pages["k_pages"], "v": pages["v_pages"]}
+    x, new_layer_pages = jax.lax.scan(body, x, (params["blocks"], layer_pages),
+                                      unroll=opts.unroll)
+    return unembed(cfg, params, x), {"k_pages": new_layer_pages["k"],
+                                     "v_pages": new_layer_pages["v"]}
+
+
 # ------------------------------------------------------------------ decode
 
 def decode_step(cfg: ArchConfig, params: Params, cache: Cache,

@@ -31,6 +31,16 @@ task's private pages to a host-side KVSwapArena (shared prefix pages
 stay resident), ``resume(task)`` brings them back bit-exact. The paged
 executor implements the real transfers (jax.device_get/put); SimExecutor
 prices them through ``LatencyModel.swap_ms`` (the ``swap_bw_gbps`` term).
+
+Speculative decoding (DESIGN.md §8): ``decode(tasks, depths)`` with
+per-task speculation depths drafts token windows through a tiny
+DraftModel (serving.spec_decode), verifies them in one AOT-bucketed
+``model.verify_step_paged`` call, commits the greedy-accepted prefix
+plus a bonus token (``last_commits`` reports per-task counts), and rolls
+back rejected-draft pages (``KVPagePool.truncate``) — the committed
+stream is identical to non-speculative greedy decode. SimExecutor prices
+draft+verify through the LatencyModel spec terms and samples acceptance
+from persistent per-task streams.
 """
 from __future__ import annotations
 
@@ -122,8 +132,16 @@ class Executor:
         prompt is cached; the FINAL chunk's logits seed the first token."""
         raise NotImplementedError
 
-    def decode(self, tasks: Sequence[Task]) -> float:
-        """One decode iteration producing one token per task."""
+    def decode(self, tasks: Sequence[Task],
+               depths: Optional[Sequence[int]] = None) -> float:
+        """One decode iteration. With ``depths`` None (the default) every
+        task produces exactly one token — the classic path. With per-task
+        speculation depths (DESIGN.md §8) an executor built for spec
+        decoding drafts up to depths[i] tokens per task, verifies them in
+        one step, and reports the committed token count per task in
+        ``last_commits`` (always >= 1: rejected windows still commit the
+        bonus token). The committed stream is greedy-identical either
+        way."""
         raise NotImplementedError
 
     def suspend(self, task: Task) -> float:
@@ -160,6 +178,15 @@ class SimExecutor(Executor):
         self.resume_count = 0
         self.swapped_bytes = 0.0
         self._swapped_tokens: Dict[int, int] = {}
+        # Speculative decoding (DESIGN.md §8): draft+verify cost comes from
+        # the latency model's spec terms; acceptance is sampled per task
+        # from a persistent stream at the model's spec_accept_rate, so a
+        # run is deterministic at equal seed/call order.
+        self.spec_steps = 0
+        self.drafted_tokens = 0
+        self.accepted_tokens = 0
+        self.last_commits: Optional[List[int]] = None
+        self._accept_rng: Dict[int, Any] = {}
 
     def prefill(self, task: Task) -> float:
         self.prefill_steps += 1
@@ -177,9 +204,31 @@ class SimExecutor(Executor):
         self._chunk_progress[task.task_id] = done
         return self.lat.prefill_ms(n) + self.overhead, False
 
-    def decode(self, tasks: Sequence[Task]) -> float:
+    def decode(self, tasks: Sequence[Task],
+               depths: Optional[Sequence[int]] = None) -> float:
         self.decode_steps += 1
-        return self.lat.decode_ms(len(tasks)) + self.overhead
+        if depths is None or not any(depths):
+            self.last_commits = [1] * len(tasks)
+            return self.lat.decode_ms(len(tasks)) + self.overhead
+        k = max(depths)
+        b = len(tasks)
+        commits: List[int] = []
+        for t, d in zip(tasks, depths):
+            d = max(0, min(int(d), t.output_len - t.tokens_done - 1))
+            rng = self._accept_rng.get(t.task_id)
+            if rng is None:
+                rng = np.random.default_rng(9_176 + 613 * t.task_id)
+                self._accept_rng[t.task_id] = rng
+            n_acc = 0
+            while n_acc < d and rng.random() < self.lat.spec_accept_rate:
+                n_acc += 1
+            self.drafted_tokens += d
+            self.accepted_tokens += n_acc
+            commits.append(n_acc + 1)
+        self.spec_steps += 1
+        self.last_commits = commits
+        return (self.lat.verify_ms(b, k) + self.lat.draft_ms(b, k)
+                + self.overhead)
 
     def suspend(self, task: Task) -> float:
         tid = task.task_id
@@ -203,6 +252,7 @@ class SimExecutor(Executor):
     def release(self, task: Task) -> None:
         self._chunk_progress.pop(task.task_id, None)
         self._swapped_tokens.pop(task.task_id, None)
+        self._accept_rng.pop(task.task_id, None)
 
     def latency_model(self) -> LatencyModel:
         return self.lat
@@ -437,8 +487,12 @@ class JaxExecutor(Executor):
         self.tokens = self.tokens.at[s].set(int(jnp.argmax(last[0])))
         return ms
 
-    def decode(self, tasks: Sequence[Task]) -> float:
+    def decode(self, tasks: Sequence[Task],
+               depths: Optional[Sequence[int]] = None) -> float:
         jnp = self.jnp
+        if depths is not None and any(depths):
+            raise RuntimeError("slot executor has no speculative decoding; "
+                               "use PagedJaxExecutor(spec_decode=True)")
         slots = [self._assign_slot(t) for t in tasks]
         if self.compact_buckets:
             b = 1
@@ -526,7 +580,9 @@ class PagedJaxExecutor(Executor):
                  prefill_chunk_size: Optional[int] = None,
                  prefix_cache: bool = False,
                  prefix_cache_pages: Optional[int] = None,
-                 host_arena_bytes: Optional[int] = None):
+                 host_arena_bytes: Optional[int] = None,
+                 spec_decode: bool = False, draft_cfg=None,
+                 draft_params=None, max_spec_depth: int = 4):
         import jax
         import jax.numpy as jnp
         from repro.models import model as M
@@ -576,6 +632,35 @@ class PagedJaxExecutor(Executor):
         self._suffix_jit: Dict[int, Any] = {}
         self._toks_memo: Dict[int, np.ndarray] = {}   # task_id -> prompt
         self._gtoks: Dict[int, np.ndarray] = {}       # group -> prefix toks
+        # Speculative decoding (DESIGN.md §8): a tiny on-device draft model
+        # proposes per-task windows, model.verify_step_paged checks them in
+        # one AOT-bucketed call (buckets over batch x max-depth), and
+        # rejected-draft pages are rolled back (pool.truncate). The
+        # committed stream is greedy-identical to depth-0 decode.
+        self.draft = None
+        self.spec_depth = 0
+        self.spec_steps = 0
+        self.accepted_tokens = 0
+        self.last_commits: Optional[List[int]] = None
+        self._gen: Dict[int, List[int]] = {}     # committed generated toks
+        self._verify_jit: Dict[Tuple[int, int], Any] = {}
+        if spec_decode:
+            from repro.serving.spec_decode import (DraftModel,
+                                                   default_draft_config)
+            if max_spec_depth < 1:
+                raise ValueError("max_spec_depth must be >= 1")
+            self.spec_depth = max_spec_depth
+            self.draft = DraftModel(
+                draft_cfg if draft_cfg is not None
+                else default_draft_config(cfg),
+                params=draft_params, max_slots=max_batch, max_seq=max_seq,
+                seed=seed)
+            if self.draft.cfg.vocab_size != cfg.vocab_size:
+                raise ValueError(
+                    f"draft vocab {self.draft.cfg.vocab_size} != target "
+                    f"vocab {cfg.vocab_size}: proposals would not be "
+                    "valid target token ids")
+            self._build_verify_steps()
 
     # -- compiled steps (one per power-of-two batch bucket) --
     def _build_steps(self):
@@ -614,6 +699,55 @@ class PagedJaxExecutor(Executor):
             toks = jnp.zeros((1, c), jnp.int32)
             self._chunk_jit[c] = jax.jit(step).lower(
                 self.params, self.pages, pt, ln, toks).compile()
+
+    # -- speculative decoding (DESIGN.md §8): one compiled verify step per
+    # (batch bucket, depth bucket) — tokens [b, K+1] where K covers the
+    # largest per-row depth in the call; shallower rows ride the same shape
+    # with their pad positions causally inert (untabled scatter + masked
+    # attention), so compile count stays O(log batch * log depth).
+    def _build_verify_steps(self):
+        jax, jnp, M = self.jax, self.jnp, self.M
+        cfg, maxp = self.cfg, self.max_pages_per_seq
+
+        def step(params, pages, pt, lengths, toks):
+            return M.verify_step_paged(cfg, params, pages, pt, lengths,
+                                       toks, use_kernel=self.use_paged_kernel)
+
+        for b in _pow2_buckets(self.max_batch):
+            for K in _pow2_buckets(self.spec_depth):
+                pt = jnp.full((b, maxp), -1, jnp.int32)
+                ln = jnp.zeros((b,), jnp.int32)
+                toks = jnp.zeros((b, K + 1), jnp.int32)
+                self._verify_jit[(b, K)] = jax.jit(step).lower(
+                    self.params, self.pages, pt, ln, toks).compile()
+
+    def _set_first_token(self, tid: int, tok: int) -> None:
+        """Record a completed prefill's first output token — and, with spec
+        decoding on, start the committed-generation history the draft
+        model's catch-up replays."""
+        self.last_tok[tid] = tok
+        if self.draft is not None:
+            self._gen[tid] = [tok]
+
+    def _committed_tokens(self, task: Task) -> np.ndarray:
+        """Token ids at the committed cached positions 0..pool.length-1:
+        the (effective) prompt followed by generated tokens. The last
+        committed token (``last_tok``, KV not yet written) is NOT included
+        — it is the first token the next decode/verify window feeds."""
+        tid = task.task_id
+        L = self.pool.length(tid)
+        prompt = self._task_tokens(task)[0]
+        if L <= prompt.shape[0]:
+            return prompt[:L]
+        gen = self._gen.get(tid, [])
+        return np.concatenate(
+            [prompt, np.asarray(gen, dtype=prompt.dtype)])[:L]
+
+    def generated_tokens(self, task: Task) -> List[int]:
+        """Committed generated token ids so far (spec_decode engines only)
+        — the greedy-equivalence contract surface tested in
+        tests/test_spec_decode.py."""
+        return list(self._gen.get(task.task_id, []))
 
     # -- prefix sharing (DESIGN.md §6) --
     def _effective_prompt(self, task: Task) -> int:
@@ -781,7 +915,7 @@ class PagedJaxExecutor(Executor):
                 # remains to compute — logits cannot be None here
                 raise RuntimeError(f"task {tid}: empty final chunk")
             self.last_prefill_logits = np.asarray(logits)
-            self.last_tok[tid] = int(jnp.argmax(logits[0]))
+            self._set_first_token(tid, int(jnp.argmax(logits[0])))
             return ms, True
         return ms, False
 
@@ -870,7 +1004,7 @@ class PagedJaxExecutor(Executor):
                     .swapaxes(1, 2))
             self.pages[name] = self.pages[name].at[:, idx].set(view)
         self.last_prefill_logits = np.asarray(last)
-        self.last_tok[tid] = int(jnp.argmax(last[0]))
+        self._set_first_token(tid, int(jnp.argmax(last[0])))
         self._insert_prefix(task, toks_np)
         return ms
 
@@ -930,14 +1064,19 @@ class PagedJaxExecutor(Executor):
             ms += (time.perf_counter() - t0) * 1000.0
             done += c
         self.last_prefill_logits = np.asarray(logits)
-        self.last_tok[tid] = int(jnp.argmax(logits[0]))
+        self._set_first_token(tid, int(jnp.argmax(logits[0])))
         return ms
 
-    def decode(self, tasks: Sequence[Task]) -> float:
+    def decode(self, tasks: Sequence[Task],
+               depths: Optional[Sequence[int]] = None) -> float:
         jnp = self.jnp
         if len(tasks) > self.max_batch:
             raise RuntimeError(f"decode batch {len(tasks)} > max_batch "
                                f"{self.max_batch}")
+        if depths is not None and any(depths):
+            if self.draft is None:
+                raise RuntimeError("executor built without spec_decode=True")
+            return self._decode_spec(tasks, [int(d) for d in depths])
         ids = [t.task_id for t in tasks]
         lengths = [self.pool.length(i) for i in ids]
         for i, ln in zip(ids, lengths):
@@ -971,7 +1110,103 @@ class PagedJaxExecutor(Executor):
         new_toks = np.argmax(self.last_logits, -1)
         for i, tok in zip(ids, new_toks):
             self.last_tok[i] = int(tok)
+            if self.draft is not None:
+                # setdefault: latency-model probes decode without a real
+                # prefill, so they have no first-token history entry
+                self._gen.setdefault(i, []).append(int(tok))
+        self.last_commits = [1] * len(ids)
         return ms
+
+    # -- speculative decoding (DESIGN.md §8) --
+    def _decode_spec(self, tasks: Sequence[Task],
+                     depths: List[int]) -> float:
+        """Draft–verify iteration: per-task windows drafted by the tiny
+        model, verified in ONE bucketed ``verify_step_paged`` call, the
+        accepted prefix committed and rejected-draft pages rolled back.
+        Greedy-equivalent to depth-0 decode by the acceptance rule."""
+        from repro.serving.spec_decode import depth_bucket, greedy_accept
+        jnp = self.jnp
+        ids = [t.task_id for t in tasks]
+        lengths = [self.pool.length(i) for i in ids]
+        t0 = time.perf_counter()
+        # clamp each row's depth to what the sequence cap, its remaining
+        # output (a window past the last needed token is wasted compute),
+        # and the compiled buckets allow
+        capped = []
+        for t, ln, d in zip(tasks, lengths, depths):
+            if ln + 1 > self.max_seq:
+                raise RuntimeError(f"task {t.task_id} exceeds max_seq "
+                                   f"{self.max_seq}")
+            capped.append(max(0, min(d, self.spec_depth,
+                                     self.max_seq - ln - 1,
+                                     t.output_len - t.tokens_done - 1)))
+        # draft proposals for every row with depth > 0
+        drafts: List[List[int]] = [[] for _ in tasks]
+        d_items, d_depths, d_rows = [], [], []
+        for r, (t, d) in enumerate(zip(tasks, capped)):
+            if d > 0:
+                d_items.append((t.task_id, self._committed_tokens(t),
+                                self.last_tok[t.task_id]))
+                d_depths.append(d)
+                d_rows.append(r)
+        if d_items:
+            for r, dr in zip(d_rows, self.draft.propose(d_items, d_depths)):
+                drafts[r] = dr
+        # reserve pages for each window (falling back to depth 0 on
+        # pressure — plain decode must still be possible) + CoW defense
+        for r, (i, ln) in enumerate(zip(ids, lengths)):
+            try:
+                self._reserve(
+                    lambda i=i, e=ln + 1 + capped[r]: self.pool.extend(i, e))
+            except OutOfPages:
+                if capped[r] == 0:
+                    raise
+                capped[r] = 0
+                drafts[r] = []
+                self._reserve(lambda i=i, e=ln + 1: self.pool.extend(i, e))
+            self._ensure_range_writable(i, ln, ln + 1 + capped[r])
+        b = depth_bucket(len(tasks), self.max_batch)
+        K = depth_bucket(max(max(capped), 1), self.spec_depth)
+        maxp = self.max_pages_per_seq
+        pt = np.full((b, maxp), -1, np.int32)
+        for r, i in enumerate(ids):
+            row = self.pool.page_table(i)
+            pt[r, : len(row)] = row
+        ln_arr = np.zeros((b,), np.int32)
+        ln_arr[: len(ids)] = lengths
+        toks = np.zeros((b, K + 1), np.int32)
+        for r, i in enumerate(ids):
+            toks[r, 0] = self.last_tok[i]
+            toks[r, 1: 1 + len(drafts[r])] = drafts[r]
+        logits, self.pages = self._verify_jit[(b, K)](
+            self.params, self.pages, jnp.asarray(pt), jnp.asarray(ln_arr),
+            jnp.asarray(toks))
+        logits.block_until_ready()
+        logits_np = np.asarray(logits)[: len(ids)]      # [n, K+1, V]
+        commits: List[int] = []
+        last_rows = []
+        for r, (t, i, ln) in enumerate(zip(tasks, ids, lengths)):
+            d = capped[r]
+            target_ids = np.argmax(logits_np[r, : d + 1], -1)
+            n_acc = greedy_accept(drafts[r][:d], target_ids)
+            bonus = int(target_ids[n_acc])
+            new_len = ln + n_acc + 1
+            if new_len < ln + d + 1:     # roll back rejected-draft pages
+                self.pool.truncate(i, new_len)
+            self.last_tok[i] = bonus
+            self._gen[i].extend(drafts[r][:n_acc] + [bonus])
+            self.draft.note_commit(i, new_len)
+            self.accepted_tokens += n_acc
+            commits.append(n_acc + 1)
+            last_rows.append(logits_np[r, n_acc])
+        self.spec_steps += 1
+        self.last_logits = np.stack(last_rows)
+        self.last_commits = commits
+        return (time.perf_counter() - t0) * 1000.0
+
+    @property
+    def drafted_tokens(self) -> int:
+        return self.draft.drafted_tokens if self.draft is not None else 0
 
     # -- host-offload KV swap (DESIGN.md §7) --
     @property
@@ -1031,6 +1266,11 @@ class PagedJaxExecutor(Executor):
             # allocated since), so swap_in cannot fail here
             self._restore_pages(self.pool.swap_in(tid), entries)
             raise
+        if self.draft is not None:
+            # a suspended task's draft state is simply dropped (DESIGN.md
+            # §8): its committed history survives in _gen, so the first
+            # propose after resume re-prefills the draft cache
+            self.draft.drop(tid)
         return (time.perf_counter() - t0) * 1000.0
 
     def resume(self, task: Task) -> float:
@@ -1050,6 +1290,9 @@ class PagedJaxExecutor(Executor):
         self.last_tok.pop(task.task_id, None)
         self._chunk_progress.pop(task.task_id, None)
         self._toks_memo.pop(task.task_id, None)
+        self._gen.pop(task.task_id, None)
+        if self.draft is not None:
+            self.draft.drop(task.task_id)
 
     def latency_model(self) -> LatencyModel:
         """Measure l(b) on the live engine (warm jit) — MeasuredLatencyModel."""

@@ -157,6 +157,32 @@ class KVPagePool:
         self._len[owner] = new_len
         return fresh
 
+    def truncate(self, owner: int, new_len: int) -> int:
+        """Roll back a resident owner's allocation to ``new_len`` tokens —
+        the speculative-decode rejection path (DESIGN.md §8): pages wholly
+        beyond ``ceil(new_len / page_size)`` drop this owner's reference
+        (returning to the free list when nothing else references them) and
+        the logical length shrinks. Rejected-draft KV still sitting inside
+        the kept boundary page is invisible to attention (positions beyond
+        the length are causally masked) and is overwritten in place as the
+        stream grows back through it. Growing is an error — use extend().
+        Returns the number of pages actually freed."""
+        if owner in self._swapped:
+            raise ValueError(f"owner {owner} is swapped out; swap_in first")
+        if owner not in self._table:
+            raise ValueError(f"owner {owner} holds no pages")
+        if new_len > self._len[owner]:
+            raise ValueError(
+                f"truncate cannot grow: {new_len} > {self._len[owner]}")
+        keep = self.pages_for(new_len)
+        pages = self._table[owner]
+        freed = 0
+        for p in pages[keep:]:
+            freed += self._unref(p)
+        self._table[owner] = pages[:keep]
+        self._len[owner] = new_len
+        return freed
+
     def free(self, owner: int) -> int:
         """Drop all of owner's references; pages whose refcount hits zero
         return to the pool. Returns #pages actually freed. Unknown owners

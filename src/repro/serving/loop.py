@@ -11,6 +11,14 @@ Host-offload KV swap (DESIGN.md §7): SuspendAction/ResumeAction move a
 task's KV between device and host through the executor; the loop flips
 ``Task.suspended`` only after the transfer actually lands, counts both
 directions, and reports the executor's total swapped bytes in LoopResult.
+
+Speculative decoding (DESIGN.md §8): a DecodeAction carrying per-task
+``depths`` commits 1..depth+1 tokens per task in one iteration — every
+committed token lands at the iteration's completion (burst delivery),
+the scheduler's per-cycle credit learns about the extras through
+``note_decoded``, and LoopResult reports the extra/drafted/accepted
+token counts. With ``depths=None`` the classic one-token path runs
+byte-identically.
 """
 from __future__ import annotations
 
@@ -39,6 +47,13 @@ class LoopResult:
     suspends: int = 0
     resumes: int = 0
     swapped_bytes: float = 0.0
+    # speculative decoding (DESIGN.md §8): tokens committed BEYOND the one
+    # per task per iteration of classic decode, plus the executor's raw
+    # draft/accept counters — surfaced in benchmark JSON
+    # (benchmarks/spec_decode.py)
+    spec_extra_tokens: int = 0
+    drafted_tokens: int = 0
+    accepted_tokens: int = 0
 
 
 def run_serving_loop(scheduler: Scheduler, executor: Executor,
@@ -49,6 +64,7 @@ def run_serving_loop(scheduler: Scheduler, executor: Executor,
     now = 0.0
     n_decode = n_prefill = n_chunks = 0
     n_suspend = n_resume = 0
+    n_spec_extra = 0
     gas = idle_gas
     tracked: List[Task] = []   # delivered, neither finished nor dropped yet
 
@@ -156,18 +172,44 @@ def run_serving_loop(scheduler: Scheduler, executor: Executor,
                 t.suspended = False
                 n_resume += 1
         elif isinstance(action, DecodeAction):
-            ms = executor.decode(action.tasks)
-            now += ms
-            n_decode += 1
-            for t in action.tasks:
-                t.token_times_ms.append(now)
-                if t.finished:
-                    scheduler.on_finish(t, now)
-                    executor.release(t)
+            if action.depths is not None:
+                # speculative iteration (DESIGN.md §8): the executor
+                # commits 1..depth+1 tokens per task (greedy-accepted
+                # drafts + bonus); every committed token lands at the
+                # iteration's completion time (burst delivery), and the
+                # scheduler's per-cycle credit is told about the extras
+                ms = executor.decode(action.tasks, action.depths)
+                now += ms
+                n_decode += 1
+                commits = list(getattr(executor, "last_commits", None)
+                               or [1] * len(action.tasks))
+                for t, c in zip(action.tasks, commits):
+                    c = max(1, min(c, t.output_len - t.tokens_done))
+                    t.token_times_ms.extend([now] * c)
+                    n_spec_extra += c - 1
+                    if c > 1 and hasattr(scheduler, "note_decoded"):
+                        scheduler.note_decoded(t, c)
+                    if t.finished:
+                        scheduler.on_finish(t, now)
+                        executor.release(t)
+            else:
+                ms = executor.decode(action.tasks)
+                now += ms
+                n_decode += 1
+                for t in action.tasks:
+                    t.token_times_ms.append(now)
+                    if t.finished:
+                        scheduler.on_finish(t, now)
+                        executor.release(t)
         deliver_arrivals(now)
     return LoopResult(tasks=list(arrivals), end_ms=now,
                       decode_iterations=n_decode, prefills=n_prefill,
                       prefill_chunks=n_chunks,
                       suspends=n_suspend, resumes=n_resume,
                       swapped_bytes=float(getattr(executor, "swapped_bytes",
-                                                  0.0)))
+                                                  0.0)),
+                      spec_extra_tokens=n_spec_extra,
+                      drafted_tokens=int(getattr(executor, "drafted_tokens",
+                                                 0)),
+                      accepted_tokens=int(getattr(executor,
+                                                  "accepted_tokens", 0)))

@@ -1,0 +1,264 @@
+"""Speculative decoding: draft–verify engine for multi-token decode
+iterations (DESIGN.md §8).
+
+SLICE's second pillar is a *dynamic control mechanism for generation
+rates*, but a one-token-per-iteration engine gives the scheduler only one
+rate actuator: which requests decode. Speculative decoding adds a second
+one — *how fast* each request generates. A cheap ``DraftModel`` proposes
+up to ``depth`` tokens autoregressively; the target model verifies the
+whole window in ONE batched step (``model.verify_step_paged`` over the
+paged KV arena); the leading run of drafts whose greedy argmax matches is
+committed together with one bonus token, and pages holding rejected-draft
+KV are rolled back (``KVPagePool.truncate``). Acceptance is the greedy
+chain rule, so the committed token stream is IDENTICAL to non-speculative
+greedy decode — speculation changes latency, never content.
+
+The scheduler prices per-request depth out of the Eq. 7 cycle headroom
+(``selection.spec_depth_budget``) and hands ``DecodeAction.depths`` to the
+executor: a lagging realtime request gets depth (multiple tokens per
+iteration), a comfortable one runs at depth 0 and donates its compute —
+the per-SLO speculation-budget move of SLOs-Serve (arXiv:2504.08784).
+
+This module owns the engine-agnostic pieces: the draft proposer (a tiny
+config from the registry run on-device over its own slot KV cache), the
+greedy acceptance rule, and depth bucketing for the AOT-compiled verify
+steps. ``PagedJaxExecutor`` wires them to the paged data plane;
+``SimExecutor`` prices draft+verify cost and expected acceptance through
+``LatencyModel``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Sequence, Tuple
+
+import numpy as np
+
+
+def greedy_accept(drafts: Sequence[int], target_ids: Sequence[int]) -> int:
+    """Greedy-equivalence acceptance: ``target_ids[i]`` is the target's
+    argmax AFTER consuming window token i (the last committed token, then
+    the drafts); draft i is accepted iff it equals ``target_ids[i]`` and
+    every earlier draft was accepted. Returns the accepted count — the
+    caller then commits that many drafts plus ``target_ids[n_acc]`` as the
+    bonus token, which is exactly the token non-speculative greedy decode
+    would have produced."""
+    n = 0
+    for d, t in zip(drafts, target_ids):
+        if int(d) != int(t):
+            break
+        n += 1
+    return n
+
+
+def depth_bucket(depth: int, max_depth: int) -> int:
+    """Smallest power-of-two >= depth, capped at max_depth — the compiled
+    verify-window sizes, mirroring the pow-2 decode batch buckets."""
+    b = 1
+    while b < depth:
+        b *= 2
+    return min(b, max_depth)
+
+
+def default_draft_config(cfg, n_layers: int = 1):
+    """The zero-configuration draft: the target architecture cut to
+    ``n_layers`` layers (same vocab by construction, so draft proposals
+    are valid target token ids). Quality only affects the acceptance rate
+    — never correctness — so a crude draft is a safe default."""
+    return dataclasses.replace(cfg, name=cfg.name + "-draft",
+                               n_layers=max(1, n_layers))
+
+
+def draft_config_from_registry(name: str, target_cfg):
+    """A draft from the tiny-config registry (reduced), reshaped onto the
+    target's vocab so its proposals are valid target token ids."""
+    from repro.configs import get_config
+    cfg = get_config(name).reduced()
+    if not cfg.has_attention or cfg.has_ssm:
+        raise ValueError(f"draft arch {name} must be pure-attention "
+                         "(the draft cache is the slot KV layout)")
+    return dataclasses.replace(cfg, name=cfg.name + "-draft",
+                               vocab_size=target_cfg.vocab_size)
+
+
+class DraftModel:
+    """Autoregressive greedy proposer over a slot-style KV cache.
+
+    The draft keeps its own KV for each task's committed prefix
+    (``valid_len``). ``propose`` first catches a task up — re-feeding
+    committed tokens the draft has not cached (cheap: the draft is tiny;
+    after an all-speculative iteration the catch-up is empty because the
+    accepted window IS the draft's own continuation) — then drafts
+    ``max(depths)`` tokens for the whole batch in lockstep through
+    AOT-compiled power-of-two batch buckets. Draft state is disposable:
+    ``drop`` forgets a task (suspend/release) and the next propose simply
+    re-prefills its committed prefix.
+    """
+
+    def __init__(self, cfg, params=None, max_slots: int = 16,
+                 max_seq: int = 512, seed: int = 0):
+        import jax
+        import jax.numpy as jnp
+        from repro.models import model as M
+        if not cfg.has_attention or cfg.has_ssm:
+            raise ValueError("DraftModel needs a pure-attention arch "
+                             "(slot KV cache + chunked catch-up)")
+        self.jax, self.jnp, self.M = jax, jnp, M
+        self.cfg = cfg
+        self.params = params if params is not None else M.init_params(
+            cfg, jax.random.PRNGKey(seed + 101))
+        self.max_slots = max_slots
+        self.max_seq = max_seq
+        self.cache = M.init_cache(cfg, max_slots, max_seq)
+        self.slot_of: Dict[int, int] = {}
+        self.free: List[int] = list(range(max_slots))
+        self.valid_len: Dict[int, int] = {}   # tid -> committed tokens cached
+        self.drafted_tokens = 0
+        self._decode_jit: Dict[int, Any] = {}
+        self._chunk_jit: Dict[int, Any] = {}
+        self._build_decode_steps()
+
+    # -- compiled steps --
+    def _build_decode_steps(self):
+        jax, jnp, M = self.jax, self.jnp, self.M
+        cfg = self.cfg
+
+        def step(params, cache, toks, idx, valid):
+            sub = {k: cache[k][:, idx] for k in ("k", "v")}
+            sub["length"] = cache["length"][idx]
+            sub["kv_pos"] = cache["kv_pos"][idx]
+            logits, new_sub = M.decode_step(cfg, params, sub, toks,
+                                            active=valid)
+            out = dict(cache)
+            for k in ("k", "v"):
+                out[k] = cache[k].at[:, idx].set(new_sub[k])
+            out["length"] = cache["length"].at[idx].set(new_sub["length"])
+            out["kv_pos"] = cache["kv_pos"].at[idx].set(new_sub["kv_pos"])
+            return logits, out
+
+        b = 1
+        while True:
+            idx = jnp.zeros((b,), jnp.int32)
+            tk = jnp.zeros((b,), jnp.int32)
+            valid = jnp.zeros((b,), bool)
+            self._decode_jit[b] = jax.jit(step).lower(
+                self.params, self.cache, tk, idx, valid).compile()
+            if b >= self.max_slots:
+                break
+            b = min(b * 2, self.max_slots)
+
+    def _chunk_step(self, c: int):
+        """Catch-up piece (batch 1, pow-2 sizes, lazily compiled — bounded
+        at O(log max_seq) entries like the executor's suffix steps)."""
+        if c not in self._chunk_jit:
+            jax, jnp, M = self.jax, self.jnp, self.M
+            cfg = self.cfg
+
+            def step(params, cache, toks, idx):
+                sub = {k: cache[k][:, idx] for k in ("k", "v")}
+                sub["length"] = cache["length"][idx]
+                sub["kv_pos"] = cache["kv_pos"][idx]
+                _, new_sub = M.prefill_chunk(cfg, params, sub, toks)
+                out = dict(cache)
+                for k in ("k", "v"):
+                    out[k] = cache[k].at[:, idx].set(new_sub[k])
+                out["length"] = cache["length"].at[idx].set(new_sub["length"])
+                out["kv_pos"] = cache["kv_pos"].at[idx].set(new_sub["kv_pos"])
+                return out
+
+            toks = jnp.zeros((1, c), jnp.int32)
+            idx = jnp.zeros((1,), jnp.int32)
+            self._chunk_jit[c] = jax.jit(step).lower(
+                self.params, self.cache, toks, idx).compile()
+        return self._chunk_jit[c]
+
+    # -- slots --
+    def _assign_slot(self, tid: int) -> int:
+        if tid in self.slot_of:
+            return self.slot_of[tid]
+        if not self.free:
+            raise RuntimeError("draft model out of KV slots")
+        s = self.free.pop(0)
+        self.slot_of[tid] = s
+        return s
+
+    def drop(self, tid: int) -> None:
+        """Forget a task's draft state (suspend/release path): the slot is
+        recycled and the next propose re-prefills from the committed
+        prefix. Idempotent."""
+        self.valid_len.pop(tid, None)
+        s = self.slot_of.pop(tid, None)
+        if s is not None:
+            self.free.append(s)
+            self.cache["length"] = self.cache["length"].at[s].set(0)
+            self.cache["kv_pos"] = self.cache["kv_pos"].at[s].set(-1)
+
+    def note_commit(self, tid: int, committed_len: int) -> None:
+        """Mark the draft's cache valid through ``committed_len`` tokens —
+        called after verification: the accepted window's draft KV was
+        computed from committed tokens, the rejected tail was not (it is
+        rewritten by the next catch-up)."""
+        if tid in self.slot_of:
+            self.valid_len[tid] = committed_len
+
+    # -- drafting --
+    def _catch_up(self, tid: int, committed: np.ndarray) -> None:
+        jnp = self.jnp
+        s = self._assign_slot(tid)
+        L = int(committed.shape[0])
+        have = min(self.valid_len.get(tid, 0), L)
+        # reset the row to the committed prefix: any stale draft tail
+        # beyond it is abandoned (its kv_pos entries point past the new
+        # length, so attention masks them until they are overwritten)
+        self.cache["length"] = self.cache["length"].at[s].set(have)
+        n = L - have
+        if n > 0:
+            pieces = []
+            b = 1 << (max(n, 1).bit_length() - 1)
+            while n:
+                if n >= b:
+                    pieces.append(b)
+                    n -= b
+                b >>= 1
+            done = have
+            idx = jnp.asarray([s], jnp.int32)
+            for c in pieces:
+                piece = jnp.asarray(committed[None, done:done + c], jnp.int32)
+                self.cache = self._chunk_step(c)(
+                    self.params, self.cache, piece, idx)
+                done += c
+        self.valid_len[tid] = L
+
+    def propose(self, items: Sequence[Tuple[int, np.ndarray, int]],
+                depths: Sequence[int]) -> List[List[int]]:
+        """items: (task_id, committed token ids [L], last committed token);
+        depths: draft tokens wanted per item (>=1). Returns the greedy
+        draft continuations, ``depths[i]`` tokens each. All items step in
+        lockstep to max(depths) — a shallower item's extra steps write
+        deeper draft KV that the next catch-up simply abandons."""
+        assert len(items) == len(depths) and items
+        jnp = self.jnp
+        K = max(depths)
+        for (tid, committed, _last) in items:
+            self._catch_up(tid, committed)
+        n = len(items)
+        b = depth_bucket(n, self.max_slots)
+        slots = [self.slot_of[tid] for tid, _, _ in items]
+        taken = set(slots)
+        pads = [s for s in range(self.max_slots) if s not in taken]
+        idx = np.asarray(slots + pads[: b - n], np.int32)
+        valid = np.zeros((b,), bool)
+        valid[:n] = True
+        toks = np.zeros((b,), np.int32)
+        toks[:n] = [last for _, _, last in items]
+        drafts: List[List[int]] = [[] for _ in items]
+        idx_j, valid_j = jnp.asarray(idx), jnp.asarray(valid)
+        for step in range(K):
+            logits, self.cache = self._decode_jit[b](
+                self.params, self.cache, jnp.asarray(toks), idx_j, valid_j)
+            nxt = np.argmax(np.asarray(logits)[:n], -1)
+            for i, d in enumerate(depths):
+                if step < d:
+                    drafts[i].append(int(nxt[i]))
+            toks[:n] = nxt
+        self.drafted_tokens += sum(depths)
+        return drafts

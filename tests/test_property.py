@@ -121,12 +121,15 @@ def test_measured_latency_monotone_inputs_monotone_outputs(points, off):
 def test_radix_pool_interleavings_no_leaks_no_aliasing(data):
     """DESIGN.md §6 + §7 safety: random interleavings of
     acquire(match+share) / insert / fork / swap_out / swap_in / free /
-    evict on the radix index over a refcounted pool never leak pages and
-    never alias pages across divergent suffixes — every page a match
-    returns (and every page an owner holds) contains exactly the token
-    block its position claims, and contents survive a host round-trip
-    (shared/pinned pages never swap; private contents come back at the
-    same logical positions)."""
+    evict / spec (draft-extend + truncate rollback, DESIGN.md §8) on the
+    radix index over a refcounted pool never leak pages and never alias
+    pages across divergent suffixes — every page a match returns (and
+    every page an owner holds) contains exactly the token block its
+    position claims, contents survive a host round-trip (shared/pinned
+    pages never swap; private contents come back at the same logical
+    positions), and a speculative window's writes land only on private
+    pages: rejected drafts roll back without ever touching shared or
+    index-pinned prefix pages."""
     from repro.serving.kv_pool import KVPagePool, OutOfPages
     from repro.serving.prefix_cache import RadixPrefixCache
 
@@ -139,7 +142,8 @@ def test_radix_pool_interleavings_no_leaks_no_aliasing(data):
     next_owner = 0
     token = st.integers(0, 1)   # tiny alphabet forces prefix collisions
     ops = data.draw(st.lists(st.sampled_from(
-        ["new", "free", "fork", "evict", "match", "swap_out", "swap_in"]),
+        ["new", "free", "fork", "evict", "match", "swap_out", "swap_in",
+         "spec"]),
         min_size=1, max_size=40))
     for op in ops:
         if op == "new":
@@ -187,6 +191,40 @@ def test_radix_pool_interleavings_no_leaks_no_aliasing(data):
             assert sorted(li for li, _ in restored) == sorted(host)
             for li, p in restored:          # "device_put" back
                 shadow[p] = host[li]
+        elif op == "spec" and set(owners) - set(swapped):
+            # speculative draft-verify window (DESIGN.md §8): extend by k
+            # draft tokens, write them, then commit a prefix and roll the
+            # rejected tail back with truncate. The window must only ever
+            # write PRIVATE pages — page-aligned sharing means the partial
+            # boundary page is never shared, and the index pins only full
+            # blocks — so shared/pinned prefix pages survive untouched.
+            o = data.draw(st.sampled_from(
+                sorted(set(owners) - set(swapped))), label="spec")
+            toks = owners[o]
+            L = len(toks)
+            k = data.draw(st.integers(1, 4), label="depth")
+            draft = tuple(data.draw(
+                st.lists(token, min_size=k, max_size=k), label="draft"))
+            try:
+                pool.extend(o, L + k)
+            except OutOfPages:
+                pool.check()
+                continue
+            new = toks + draft
+            tbl = pool.page_table(o)
+            for li in range(L // PSZ, len(tbl)):
+                assert not pool.is_shared(o, li), (
+                    "speculative write would hit a shared page")
+                shadow[tbl[li]] = new[li * PSZ:(li + 1) * PSZ]
+            n_acc = data.draw(st.integers(0, k), label="accept")
+            commit = L + n_acc
+            pool.truncate(o, commit)
+            owners[o] = new[:commit]
+            tbl = pool.page_table(o)
+            if tbl and commit > 0:
+                li = len(tbl) - 1       # rejected tail inside the kept
+                # boundary page is invisible (masked) — model it trimmed
+                shadow[tbl[li]] = new[li * PSZ: commit]
         elif op == "fork" and set(owners) - set(swapped):
             o = data.draw(st.sampled_from(
                 sorted(set(owners) - set(swapped))), label="fork")
