@@ -47,6 +47,11 @@ GATES = [
     ("spec_decode", ("sim", "spec", "rt_slo"), "high", 0.05),
     ("spec_decode", ("sim", "spec", "slo"), "high", 0.05),
     ("spec_decode", ("sim", "rt_tpot_p99_improvement"), "high", 0.10),
+    # gate 5: sharded serving — structural/deterministic only (equivalence,
+    # leaks, device count); throughput on forced host devices is not gated
+    ("sharded_serving", ("engine", "equiv_ok"), "high", 0.0),
+    ("sharded_serving", ("engine", "pages_leaked"), "low", 0.0),
+    ("sharded_serving", ("engine", "n_devices"), "high", 0.0),
 ]
 
 
@@ -119,7 +124,7 @@ def main() -> None:
                     help="skip real-JAX-engine measurements (faster)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig1,table2,fig7,fig10,"
-                         "fig11,kv,prefill,prefix,swap,spec")
+                         "fig11,kv,prefill,prefix,swap,spec,sharded")
     ap.add_argument("--tiny", action="store_true",
                     help="CI smoke configs for the benches that have one")
     ap.add_argument("--check", action="store_true",
@@ -137,8 +142,8 @@ def main() -> None:
 
     from benchmarks import (dynamic_slo, kv_pressure, kv_swap,
                             latency_vs_batch, prefill_interference,
-                            prefix_sharing, ratio_sweep, spec_decode,
-                            static_tpot, workload_sweep)
+                            prefix_sharing, ratio_sweep, sharded_serving,
+                            spec_decode, static_tpot, workload_sweep)
 
     print("name,value,derived")
     t0 = time.time()
@@ -163,6 +168,8 @@ def main() -> None:
         kv_swap.run(tiny=args.tiny, engine=not args.skip_engine)
     if only is None or "spec" in only:
         spec_decode.run(tiny=args.tiny, engine=not args.skip_engine)
+    if only is None or "sharded" in only:
+        sharded_serving.run(tiny=args.tiny)
     print(f"total_wall_s,{time.time() - t0:.1f},", flush=True)
 
     ran = {"prefill_interference"} if only is None or "prefill" in only else set()
@@ -172,6 +179,8 @@ def main() -> None:
         ran.add("kv_swap")
     if only is None or "spec" in only:
         ran.add("spec_decode")
+    if only is None or "sharded" in only:
+        ran.add("sharded_serving")
     if args.update_baselines:
         update_baselines(sorted(ran & set(_gated_benches())))
     if args.check:

@@ -30,6 +30,12 @@ mesh (see dryrun.py for the lowering proof).
   # realtime requests get multiple tokens per iteration
   PYTHONPATH=src python -m repro.launch.serve --executor paged \
       --spec-decode --spec-depth 4 [--draft-config smollm-360m]
+
+  # tensor-parallel sharded serving (DESIGN.md §9): partition weights and
+  # the KV page arena over a (data, model) mesh — forced host CPU devices
+  # here, real chips on TPU
+  PYTHONPATH=src python -m repro.launch.serve --executor paged \
+      --mesh-shape 1,4
 """
 from __future__ import annotations
 
@@ -87,10 +93,38 @@ def main():
     ap.add_argument("--shared-prefix-frac", type=float, default=0.0,
                     help="fraction of workload tasks opening with a shared "
                          "system prompt from a per-seed prefix pool")
+    ap.add_argument("--mesh-shape", default=None,
+                    help="paged executor: 'data,model' serving mesh, e.g. "
+                         "1,4 — shards weights + the KV page arena over "
+                         "the model axis (DESIGN.md §9). On CPU the device "
+                         "count is forced via XLA_FLAGS automatically")
     ap.add_argument("--reduced", action="store_true", default=True,
                     help="use the reduced (CPU-feasible) config")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    mesh_shape = None
+    if args.mesh_shape is not None:
+        try:
+            mesh_shape = tuple(int(x) for x in args.mesh_shape.split(","))
+            assert len(mesh_shape) == 2 and min(mesh_shape) >= 1
+        except (ValueError, AssertionError):
+            raise SystemExit("--mesh-shape wants 'data,model', e.g. 1,4")
+        if args.executor != "paged":
+            raise SystemExit("--mesh-shape requires --executor paged "
+                             "(the slot engine has no sharded arena)")
+        if args.paged_kernel:
+            raise SystemExit("--mesh-shape shards the jnp attention path "
+                             "via GSPMD; --paged-kernel needs a shard_map "
+                             "wrapper (not implemented)")
+        # must happen before the heavy imports below first-init jax
+        import os
+        n = mesh_shape[0] * mesh_shape[1]
+        if "xla_force_host_platform_device_count" not in os.environ.get(
+                "XLA_FLAGS", ""):
+            os.environ["XLA_FLAGS"] = (
+                os.environ.get("XLA_FLAGS", "")
+                + f" --xla_force_host_platform_device_count={n}").strip()
 
     from repro.configs import get_config
     from repro.core.schedulers import (FastServeScheduler, OrcaScheduler,
@@ -130,6 +164,10 @@ def main():
     page_budget = None
     prefix_hint = None
     n_pages = args.pages or (args.slots * args.max_seq) // args.page_size
+    mesh = None
+    if mesh_shape is not None:
+        from repro.launch.mesh import make_serving_mesh
+        mesh = make_serving_mesh(data=mesh_shape[0], model=mesh_shape[1])
     if args.executor == "paged":
         draft_cfg = None
         if args.spec_decode and args.draft_config is not None:
@@ -144,7 +182,8 @@ def main():
                               prefix_cache=args.prefix_cache,
                               spec_decode=args.spec_decode,
                               draft_cfg=draft_cfg,
-                              max_spec_depth=args.spec_depth)
+                              max_spec_depth=args.spec_depth,
+                              mesh=mesh)
         page_budget = ex.page_budget()
         if args.prefix_cache:
             prefix_hint = ex.cached_prompt_tokens

@@ -119,6 +119,18 @@ def param_specs(cfg: ArchConfig, mesh, train: bool) -> Dict[str, Any]:
     return out
 
 
+def page_specs(cfg: ArchConfig, mesh) -> Dict[str, Any]:
+    """KV page arena [L, n_pages, Hkv, page_size, hd] (DESIGN.md §9):
+    per-device KV-head slabs over 'model' when the head count divides the
+    axis, replicated otherwise — the same jit-input divisibility rule as
+    param_specs. Page tables stay replicated host data either way: paging
+    is pure indirection, so one table addresses every device's slab."""
+    mways = mesh.shape["model"]
+    h = "model" if _div(cfg.n_kv_heads, mways) else None
+    spec = P(None, None, h, None, None)
+    return {"k_pages": spec, "v_pages": spec}
+
+
 def cache_specs(cfg: ArchConfig, mesh, batch: int,
                 buf_len: Optional[int] = None) -> Dict[str, Any]:
     mways = mesh.shape["model"]

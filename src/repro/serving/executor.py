@@ -569,9 +569,22 @@ class PagedJaxExecutor(Executor):
     chunk; admission (page_budget) counts shared pages once and treats
     idle cached pages as reclaimable headroom (evicted on pressure).
 
+    Tensor parallelism (DESIGN.md §9): with ``mesh=`` (a ('data','model')
+    jax mesh, see launch.mesh.make_serving_mesh) the engine shards weights
+    by launch.sharding.param_specs and the page arena by page_specs — per-
+    device KV-head slabs over 'model', page tables replicated — and lowers
+    every AOT step inside the mesh + activation_partitioning context (the
+    dry-run idiom), so decode/chunk/verify run as sharded columns. The
+    host-side control plane (pool, radix cache, swap arena, draft model)
+    is untouched: suspend/resume gather/scatter every device's head slab
+    through the same device_get/put path. Logits match the single-device
+    engine to < 1e-5 (tests/test_sharded.py).
+
     Restrictions: attention-only archs (SSM state is O(1)/task — nothing to
     page), and sequences are hard-capped at max_seq (the paged cache is
     append-only; it never ring-wraps like the slot path's long-context mode).
+    Mesh mode shards the jnp paged-attention path through GSPMD; the Pallas
+    kernel would need a shard_map wrapper, so mesh + use_paged_kernel raises.
     """
 
     def __init__(self, cfg, params=None, n_pages: int = 64,
@@ -582,7 +595,8 @@ class PagedJaxExecutor(Executor):
                  prefix_cache_pages: Optional[int] = None,
                  host_arena_bytes: Optional[int] = None,
                  spec_decode: bool = False, draft_cfg=None,
-                 draft_params=None, max_spec_depth: int = 4):
+                 draft_params=None, max_spec_depth: int = 4,
+                 mesh=None):
         import jax
         import jax.numpy as jnp
         from repro.models import model as M
@@ -619,6 +633,32 @@ class PagedJaxExecutor(Executor):
                 self.pool, max_pages=prefix_cache_pages or n_pages)
         self.max_pages_per_seq = -(-max_seq // page_size)
         self.pages = M.init_paged_cache(cfg, n_pages, page_size)
+        # Tensor-parallel mode (DESIGN.md §9): shard params/pages over the
+        # mesh BEFORE any step is lowered — AOT input shardings are taken
+        # from the example arrays, so the canonical layout must be pinned
+        # here once and preserved by every later update.
+        self.mesh = mesh
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+            from repro.launch import sharding as shard_rules
+            from repro.launch.mesh import batch_axes
+            if use_paged_kernel:
+                raise ValueError(
+                    "mesh mode shards the jnp paged-attention path via "
+                    "GSPMD; the Pallas kernel needs a shard_map wrapper "
+                    "(not implemented) — drop use_paged_kernel")
+            if "model" not in mesh.axis_names or "data" not in mesh.axis_names:
+                raise ValueError(
+                    "serving mesh needs ('data', 'model') axes — see "
+                    "launch.mesh.make_serving_mesh")
+            self._batch_axes = batch_axes(mesh)
+            self._repl_sh = NamedSharding(mesh, PartitionSpec())
+            self._page_sh = shard_rules.to_shardings(
+                mesh, shard_rules.page_specs(cfg, mesh))
+            self.params = jax.device_put(
+                self.params, shard_rules.to_shardings(
+                    mesh, shard_rules.param_specs(cfg, mesh, train=False)))
+            self.pages = jax.device_put(self.pages, self._page_sh)
         self.last_tok: Dict[int, int] = {}
         self.last_logits: Optional[np.ndarray] = None
         self.last_prefill_logits: Optional[np.ndarray] = None
@@ -662,9 +702,44 @@ class PagedJaxExecutor(Executor):
                     "valid target token ids")
             self._build_verify_steps()
 
+    # -- mesh plumbing (DESIGN.md §9) --
+    def _dev_in(self, x):
+        """Commit a step input as replicated over the mesh: AOT-compiled
+        calls reject inputs whose shardings differ from the lowered
+        examples, and fresh np/jnp arrays would land on one device.
+        Identity in single-device mode."""
+        x = self.jnp.asarray(x)
+        if self.mesh is None:
+            return x
+        return self.jax.device_put(x, self._repl_sh)
+
+    def _canonicalize_pages(self) -> None:
+        """Re-pin the page arena to its canonical sharding after an eager
+        (non-AOT) update — prefill splices, CoW page copies, swap-in
+        scatters. Eager ops on sharded operands let GSPMD pick the result
+        layout, and the next compiled step requires the canonical one."""
+        if self.mesh is not None:
+            self.pages = self.jax.device_put(self.pages, self._page_sh)
+
+    def _lower(self, fn, example_args, pages_out: bool = False):
+        """AOT-compile ``fn`` against example args. In mesh mode the
+        lowering runs inside the mesh + activation_partitioning context
+        (the dryrun.py idiom) so sharded params/pages and the shard()
+        constraints in the model code take effect; ``pages_out`` pins the
+        (logits, pages) output to (replicated, canonical page sharding),
+        keeping self.pages stable across steps."""
+        jax = self.jax
+        if self.mesh is None:
+            return jax.jit(fn).lower(*example_args).compile()
+        from repro.models.partitioning import activation_partitioning
+        out_sh = (self._repl_sh, self._page_sh) if pages_out else None
+        with self.mesh, activation_partitioning(self._batch_axes, "model"):
+            return jax.jit(fn, out_shardings=out_sh).lower(
+                *example_args).compile()
+
     # -- compiled steps (one per power-of-two batch bucket) --
     def _build_steps(self):
-        jax, jnp, M = self.jax, self.jnp, self.M
+        jnp, M = self.jnp, self.M
         cfg, maxp = self.cfg, self.max_pages_per_seq
 
         def step(params, pages, pt, lengths, tokens, active):
@@ -673,18 +748,19 @@ class PagedJaxExecutor(Executor):
                                        use_kernel=self.use_paged_kernel)
 
         for b in _pow2_buckets(self.max_batch):
-            pt = jnp.full((b, maxp), -1, jnp.int32)
-            ln = jnp.zeros((b,), jnp.int32)
-            tk = jnp.zeros((b,), jnp.int32)
-            av = jnp.zeros((b,), bool)
-            self._step_jit[b] = jax.jit(step).lower(
-                self.params, self.pages, pt, ln, tk, av).compile()
+            pt = self._dev_in(jnp.full((b, maxp), -1, jnp.int32))
+            ln = self._dev_in(jnp.zeros((b,), jnp.int32))
+            tk = self._dev_in(jnp.zeros((b,), jnp.int32))
+            av = self._dev_in(jnp.zeros((b,), bool))
+            self._step_jit[b] = self._lower(
+                step, (self.params, self.pages, pt, ln, tk, av),
+                pages_out=True)
 
     # -- chunked prefill (DESIGN.md §5): one compiled step per chunk-size
     # bucket; pages for each chunk are allocated incrementally as the chunk
     # arrives, never reserved at the prompt's peak up front.
     def _build_chunk_steps(self):
-        jax, jnp, M = self.jax, self.jnp, self.M
+        jnp, M = self.jnp, self.M
         cfg, maxp = self.cfg, self.max_pages_per_seq
 
         def step(params, pages, pt, lengths, toks):
@@ -694,11 +770,12 @@ class PagedJaxExecutor(Executor):
         # _pow2_buckets yields its limit, so this covers every _chunk_pieces
         # output: {prefill_chunk_size} ∪ {2^k < prefill_chunk_size}
         for c in sorted(set(_pow2_buckets(self.prefill_chunk_size))):
-            pt = jnp.full((1, maxp), -1, jnp.int32)
-            ln = jnp.zeros((1,), jnp.int32)
-            toks = jnp.zeros((1, c), jnp.int32)
-            self._chunk_jit[c] = jax.jit(step).lower(
-                self.params, self.pages, pt, ln, toks).compile()
+            pt = self._dev_in(jnp.full((1, maxp), -1, jnp.int32))
+            ln = self._dev_in(jnp.zeros((1,), jnp.int32))
+            toks = self._dev_in(jnp.zeros((1, c), jnp.int32))
+            self._chunk_jit[c] = self._lower(
+                step, (self.params, self.pages, pt, ln, toks),
+                pages_out=True)
 
     # -- speculative decoding (DESIGN.md §8): one compiled verify step per
     # (batch bucket, depth bucket) — tokens [b, K+1] where K covers the
@@ -706,7 +783,7 @@ class PagedJaxExecutor(Executor):
     # with their pad positions causally inert (untabled scatter + masked
     # attention), so compile count stays O(log batch * log depth).
     def _build_verify_steps(self):
-        jax, jnp, M = self.jax, self.jnp, self.M
+        jnp, M = self.jnp, self.M
         cfg, maxp = self.cfg, self.max_pages_per_seq
 
         def step(params, pages, pt, lengths, toks):
@@ -715,11 +792,12 @@ class PagedJaxExecutor(Executor):
 
         for b in _pow2_buckets(self.max_batch):
             for K in _pow2_buckets(self.spec_depth):
-                pt = jnp.full((b, maxp), -1, jnp.int32)
-                ln = jnp.zeros((b,), jnp.int32)
-                toks = jnp.zeros((b, K + 1), jnp.int32)
-                self._verify_jit[(b, K)] = jax.jit(step).lower(
-                    self.params, self.pages, pt, ln, toks).compile()
+                pt = self._dev_in(jnp.full((b, maxp), -1, jnp.int32))
+                ln = self._dev_in(jnp.zeros((b,), jnp.int32))
+                toks = self._dev_in(jnp.zeros((b, K + 1), jnp.int32))
+                self._verify_jit[(b, K)] = self._lower(
+                    step, (self.params, self.pages, pt, ln, toks),
+                    pages_out=True)
 
     def _set_first_token(self, tid: int, tok: int) -> None:
         """Record a completed prefill's first output token — and, with spec
@@ -818,6 +896,7 @@ class PagedJaxExecutor(Executor):
                 for name in ("k_pages", "v_pages"):
                     self.pages[name] = self.pages[name].at[:, new].set(
                         self.pages[name][:, old])
+                self._canonicalize_pages()
 
     def _acquire_prefix(self, task: Task, toks_np) -> int:
         """Register this task over the cached page-aligned prefix of its
@@ -899,11 +978,12 @@ class PagedJaxExecutor(Executor):
             row = self.pool.page_table(tid)
             pt = np.full((1, self.max_pages_per_seq), -1, np.int32)
             pt[0, : len(row)] = row
-            piece = jnp.asarray(toks_full[:, done:done + c], jnp.int32)
+            piece = self._dev_in(jnp.asarray(toks_full[:, done:done + c],
+                                             jnp.int32))
             t0 = time.perf_counter()
             logits, self.pages = self._chunk_jit[c](
-                self.params, self.pages, jnp.asarray(pt),
-                jnp.asarray([done], jnp.int32), piece)
+                self.params, self.pages, self._dev_in(pt),
+                self._dev_in(jnp.asarray([done], jnp.int32)), piece)
             logits.block_until_ready()
             ms += (time.perf_counter() - t0) * 1000.0
             done += c
@@ -981,14 +1061,14 @@ class PagedJaxExecutor(Executor):
             return ms
         phys = self._reserve(
             lambda: self.pool.alloc(tid, L))         # OutOfPages -> caller
-        toks = jnp.asarray(toks_np, jnp.int32)
+        toks = self._dev_in(jnp.asarray(toks_np, jnp.int32))
         key = (L,)
         if key not in self._prefill_jit:
             # AOT-compile so jit tracing never pollutes the measured latency
             # (same rationale as JaxExecutor.prefill).
-            fn = jax.jit(
-                lambda p, t: M.prefill(self.cfg, p, t, buf_len=self.max_seq))
-            self._prefill_jit[key] = fn.lower(self.params, toks).compile()
+            self._prefill_jit[key] = self._lower(
+                lambda p, t: M.prefill(self.cfg, p, t, buf_len=self.max_seq),
+                (self.params, toks))
         t0 = time.perf_counter()
         last, cache1 = self._prefill_jit[key](self.params, toks)
         last.block_until_ready()
@@ -1003,6 +1083,7 @@ class PagedJaxExecutor(Executor):
                     .reshape(src.shape[0], src.shape[2], n_alloc, psz, -1)
                     .swapaxes(1, 2))
             self.pages[name] = self.pages[name].at[:, idx].set(view)
+        self._canonicalize_pages()
         self.last_prefill_logits = np.asarray(last)
         self._set_first_token(tid, int(jnp.argmax(last[0])))
         self._insert_prefix(task, toks_np)
@@ -1013,18 +1094,20 @@ class PagedJaxExecutor(Executor):
         — the suffix jit cache is bounded at O(log max_seq) entries, same
         economics as the decode/chunk buckets."""
         if c not in self._suffix_jit:
-            jax, jnp, M = self.jax, self.jnp, self.M
-            pt0 = jnp.full((1, self.max_pages_per_seq), -1, jnp.int32)
-            ln0 = jnp.zeros((1,), jnp.int32)
-            tk0 = jnp.zeros((1, c), jnp.int32)
+            jnp, M = self.jnp, self.M
+            pt0 = self._dev_in(jnp.full((1, self.max_pages_per_seq), -1,
+                                        jnp.int32))
+            ln0 = self._dev_in(jnp.zeros((1,), jnp.int32))
+            tk0 = self._dev_in(jnp.zeros((1, c), jnp.int32))
 
             def step(params, pages, pt, lengths, toks):
                 return M.prefill_chunk_paged(
                     self.cfg, params, pages, pt, lengths, toks,
                     use_kernel=self.use_paged_kernel)
 
-            self._suffix_jit[c] = jax.jit(step).lower(
-                self.params, self.pages, pt0, ln0, tk0).compile()
+            self._suffix_jit[c] = self._lower(
+                step, (self.params, self.pages, pt0, ln0, tk0),
+                pages_out=True)
         return self._suffix_jit[c]
 
     def _prefill_suffix(self, task: Task, toks_np, start: int,
@@ -1042,7 +1125,7 @@ class PagedJaxExecutor(Executor):
         row = self.pool.page_table(tid)
         pt = np.full((1, self.max_pages_per_seq), -1, np.int32)
         pt[0, : len(row)] = row
-        pt = jnp.asarray(pt)
+        pt = self._dev_in(jnp.asarray(pt))
         n = L - start
         pieces = []                          # binary decomposition of n
         b = 1 << (n.bit_length() - 1)
@@ -1056,10 +1139,12 @@ class PagedJaxExecutor(Executor):
         logits = None
         for c in pieces:
             fn = self._suffix_step(c)
-            piece = jnp.asarray(toks_np[:, done:done + c], jnp.int32)
+            piece = self._dev_in(jnp.asarray(toks_np[:, done:done + c],
+                                             jnp.int32))
             t0 = time.perf_counter()
-            logits, self.pages = fn(self.params, self.pages, pt,
-                                    jnp.asarray([done], jnp.int32), piece)
+            logits, self.pages = fn(
+                self.params, self.pages, pt,
+                self._dev_in(jnp.asarray([done], jnp.int32)), piece)
             logits.block_until_ready()
             ms += (time.perf_counter() - t0) * 1000.0
             done += c
@@ -1102,8 +1187,8 @@ class PagedJaxExecutor(Executor):
         av[: len(ids)] = True
         t0 = time.perf_counter()
         logits, self.pages = self._step_jit[b](
-            self.params, self.pages, jnp.asarray(pt), jnp.asarray(ln),
-            jnp.asarray(tk), jnp.asarray(av))
+            self.params, self.pages, self._dev_in(pt), self._dev_in(ln),
+            self._dev_in(tk), self._dev_in(av))
         logits.block_until_ready()
         ms = (time.perf_counter() - t0) * 1000.0
         self.last_logits = np.asarray(logits)[: len(ids)]
@@ -1179,8 +1264,8 @@ class PagedJaxExecutor(Executor):
             toks[r, 0] = self.last_tok[i]
             toks[r, 1: 1 + len(drafts[r])] = drafts[r]
         logits, self.pages = self._verify_jit[(b, K)](
-            self.params, self.pages, jnp.asarray(pt), jnp.asarray(ln_arr),
-            jnp.asarray(toks))
+            self.params, self.pages, self._dev_in(pt), self._dev_in(ln_arr),
+            self._dev_in(toks))
         logits.block_until_ready()
         logits_np = np.asarray(logits)[: len(ids)]      # [n, K+1, V]
         commits: List[int] = []
@@ -1234,9 +1319,10 @@ class PagedJaxExecutor(Executor):
         k_host = np.stack([blob["k"] for _, blob in entries], axis=1)
         v_host = np.stack([blob["v"] for _, blob in entries], axis=1)
         self.pages["k_pages"] = self.pages["k_pages"].at[:, idx].set(
-            jnp.asarray(k_host))
+            self._dev_in(k_host))
         self.pages["v_pages"] = self.pages["v_pages"].at[:, idx].set(
-            jnp.asarray(v_host))
+            self._dev_in(v_host))
+        self._canonicalize_pages()
 
     def suspend(self, task: Task) -> float:
         """Swap the task's private pages to the host arena: gather their

@@ -1,0 +1,30 @@
+"""Shared fixtures. The import-time XLA_FLAGS guard MUST run before any
+test module imports jax: jax reads the flag once at backend init, so the
+forced host-device count only takes effect if we set it here (conftest is
+imported before collection). Guarded on the flag already being present so
+the CI device matrix — and any user-set XLA_FLAGS — wins over the default.
+Single-device runs still collect everything; tests needing a mesh skip via
+the ``mesh4`` fixture when fewer than 4 devices came up (e.g. when the
+environment pre-set a device count of 1)."""
+import os
+
+if "xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=4").strip()
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def mesh4():
+    """4-way tensor-parallel serving mesh, or skip on single-device runs."""
+    import jax
+
+    from repro.launch.mesh import make_serving_mesh
+
+    if jax.device_count() < 4:
+        pytest.skip("needs 4 devices "
+                    "(XLA_FLAGS=--xla_force_host_platform_device_count=4)")
+    return make_serving_mesh(model=4)

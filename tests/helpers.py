@@ -1,0 +1,69 @@
+"""Shared engine/oracle equivalence helpers for the serving test suite.
+
+Every engine-equivalence test in the repo asserts the same contract —
+candidate-engine logits match an oracle engine to atol 1e-5 (exact-zero
+rtol: logits near 0 must ALSO match, a ratio test would let them drift) —
+and builds the same tiny reduced engines. Centralised here so the sharded
+harness (test_sharded.py) states compositions, not plumbing.
+
+Not a pytest plugin: plain importable module (tests/ is on sys.path via
+rootdir insertion, so ``from helpers import ...`` works without a package).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+ATOL = 1e-5
+
+
+def assert_logits_close(got, want, atol: float = ATOL, err_msg: str = ""):
+    """The repo-wide engine-equivalence contract: atol-only (rtol=0)."""
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=atol, rtol=0, err_msg=err_msg)
+
+
+def reduced_cfg(name: str = "smollm-360m"):
+    """The standard tiny test config (2 layers, d_model 256, GQA->1 head)."""
+    from repro.configs import get_config
+    return get_config(name).reduced()
+
+
+def sharded_test_cfg(ways: int = 4, name: str = "smollm-360m"):
+    """Reduced config with n_kv_heads widened to ``ways`` (MHA) so the page
+    arena's head dim actually shards: the reduced GQA head count of 1 is
+    not divisible by a 4-way model axis and would silently fall back to
+    replicated pages (page_specs), making equivalence tests vacuous."""
+    cfg = reduced_cfg(name)
+    return dataclasses.replace(cfg, n_kv_heads=ways)
+
+
+def make_slot_engine(cfg, *, params=None, max_slots: int = 4,
+                     max_seq: int = 64, seed: int = 0, **kw):
+    """Slot-cache oracle engine (JaxExecutor) with suite-standard sizing."""
+    from repro.serving.executor import JaxExecutor
+    return JaxExecutor(cfg, params=params, max_slots=max_slots,
+                       max_seq=max_seq, seed=seed, **kw)
+
+
+def make_paged_engine(cfg, *, params=None, n_pages: int = 16,
+                      page_size: int = 8, max_seq: int = 64,
+                      max_batch: int = 4, seed: int = 0, **kw):
+    """Paged candidate engine (PagedJaxExecutor) with suite-standard
+    sizing; pass mesh=... for the tensor-parallel sharded mode."""
+    from repro.serving.executor import PagedJaxExecutor
+    return PagedJaxExecutor(cfg, params=params, n_pages=n_pages,
+                            page_size=page_size, max_seq=max_seq,
+                            max_batch=max_batch, seed=seed, **kw)
+
+
+def drive_plain(ex, tasks, n_steps: int):
+    """Plain (depth-0) greedy decode loop; returns per-task token streams
+    starting from the prefill's first token."""
+    streams = {t.task_id: [ex.last_tok[t.task_id]] for t in tasks}
+    for _ in range(n_steps):
+        ex.decode(tasks)
+        for t in tasks:
+            streams[t.task_id].append(ex.last_tok[t.task_id])
+    return streams

@@ -15,6 +15,9 @@ from repro.serving.executor import SimExecutor, _chunk_pieces
 from repro.serving.loop import run_serving_loop
 from repro.serving.metrics import summarize
 
+from helpers import (assert_logits_close, make_paged_engine,
+                     make_slot_engine, reduced_cfg)
+
 LAT = paper_fig1_model()
 
 
@@ -95,19 +98,16 @@ def test_chunk_pieces_cover_and_stay_in_bucket_set():
 
 @pytest.fixture(scope="module")
 def tiny_cfg():
-    from repro.configs import get_config
-    return get_config("smollm-360m").reduced()
+    return reduced_cfg()
 
 
 def test_slot_executor_chunked_matches_monolithic(tiny_cfg):
     """Acceptance: chunked prefill logits == monolithic prefill logits
     (atol 1e-5) on JaxExecutor, and the decode stream that follows is
     identical (the caches match)."""
-    from repro.serving.executor import JaxExecutor
-
-    exA = JaxExecutor(tiny_cfg, max_slots=4, max_seq=64, seed=0)
-    exC = JaxExecutor(tiny_cfg, params=exA.params, max_slots=4, max_seq=64,
-                      seed=0, prefill_chunk_size=8)
+    exA = make_slot_engine(tiny_cfg)
+    exC = make_slot_engine(tiny_cfg, params=exA.params,
+                           prefill_chunk_size=8)
     t = qa_task(prompt_len=20, output_len=6)
     exA.prefill(t)
     ms, done = exC.prefill_chunk(t, 8)
@@ -116,25 +116,20 @@ def test_slot_executor_chunked_matches_monolithic(tiny_cfg):
     assert not done
     ms, done = exC.prefill_chunk(t, 99)         # clamped to the remainder
     assert done
-    np.testing.assert_allclose(exC.last_prefill_logits,
-                               exA.last_prefill_logits, atol=1e-5, rtol=0)
+    assert_logits_close(exC.last_prefill_logits, exA.last_prefill_logits)
     for _ in range(3):
         exA.decode([t])
         exC.decode([t])
-        np.testing.assert_allclose(exC.last_logits, exA.last_logits,
-                                   atol=1e-5, rtol=0)
+        assert_logits_close(exC.last_logits, exA.last_logits)
 
 
 def test_paged_executor_chunked_matches_monolithic(tiny_cfg):
     """Acceptance: chunked prefill on PagedJaxExecutor == monolithic slot
     prefill (atol 1e-5), with pages allocated incrementally per chunk and
     never exceeding the monolithic peak."""
-    from repro.serving.executor import JaxExecutor, PagedJaxExecutor
-
-    exA = JaxExecutor(tiny_cfg, max_slots=4, max_seq=64, seed=0)
-    exP = PagedJaxExecutor(tiny_cfg, params=exA.params, n_pages=16,
-                           page_size=8, max_seq=64, seed=0, max_batch=4,
-                           prefill_chunk_size=8)
+    exA = make_slot_engine(tiny_cfg)
+    exP = make_paged_engine(tiny_cfg, params=exA.params,
+                            prefill_chunk_size=8)
     t = qa_task(prompt_len=20, output_len=6)
     exA.prefill(t)
     peak = exP.pool.pages_for(20)
@@ -145,12 +140,10 @@ def test_paged_executor_chunked_matches_monolithic(tiny_cfg):
     assert used == sorted(used) and used[-1] == peak   # incremental growth
     assert max(used) <= peak                           # never above peak
     assert used[0] < peak                              # truly incremental
-    np.testing.assert_allclose(exP.last_prefill_logits,
-                               exA.last_prefill_logits, atol=1e-5, rtol=0)
+    assert_logits_close(exP.last_prefill_logits, exA.last_prefill_logits)
     exA.decode([t])
     exP.decode([t])
-    np.testing.assert_allclose(exP.last_logits, exA.last_logits,
-                               atol=1e-5, rtol=0)
+    assert_logits_close(exP.last_logits, exA.last_logits)
     exP.release(t)
     exP.pool.check()
     assert exP.pool.used_pages == 0
@@ -159,11 +152,9 @@ def test_paged_executor_chunked_matches_monolithic(tiny_cfg):
 def test_slot_executor_chunked_reused_slot_matches(tiny_cfg):
     """release() resets the slot row (length/kv_pos), so chunked prefill on
     a REUSED slot must still match atomic — no stale-KV leakage."""
-    from repro.serving.executor import JaxExecutor
-
-    exA = JaxExecutor(tiny_cfg, max_slots=1, max_seq=64, seed=0)
-    exC = JaxExecutor(tiny_cfg, params=exA.params, max_slots=1, max_seq=64,
-                      seed=0, prefill_chunk_size=8)
+    exA = make_slot_engine(tiny_cfg, max_slots=1)
+    exC = make_slot_engine(tiny_cfg, params=exA.params, max_slots=1,
+                           prefill_chunk_size=8)
     t1 = qa_task(prompt_len=20, output_len=3)
     t2 = qa_task(prompt_len=13, output_len=3)
     exA.prefill(t1)
@@ -176,21 +167,18 @@ def test_slot_executor_chunked_reused_slot_matches(tiny_cfg):
     done = False
     while not done:
         _, done = exC.prefill_chunk(t2, 8)
-    np.testing.assert_allclose(exC.last_prefill_logits,
-                               exA.last_prefill_logits, atol=1e-5, rtol=0)
+    assert_logits_close(exC.last_prefill_logits, exA.last_prefill_logits)
 
 
 def test_paged_chunked_out_of_pages_mid_chunk_resumes(tiny_cfg):
     """OutOfPages on a non-first piece must leave (pool, progress)
     consistent: the task resumes from its cached tokens once pages free up
     and still matches the monolithic logits."""
-    from repro.serving.executor import JaxExecutor, PagedJaxExecutor
     from repro.serving.kv_pool import OutOfPages
 
-    exA = JaxExecutor(tiny_cfg, max_slots=1, max_seq=64, seed=0)
-    ex = PagedJaxExecutor(tiny_cfg, params=exA.params, n_pages=2,
-                          page_size=8, max_seq=64, max_batch=2, seed=0,
-                          prefill_chunk_size=16)
+    exA = make_slot_engine(tiny_cfg, max_slots=1)
+    ex = make_paged_engine(tiny_cfg, params=exA.params, n_pages=2,
+                           max_batch=2, prefill_chunk_size=16)
     ex.pool.alloc(999, 8)                 # blocker holds 1 of 2 pages
     t = qa_task(prompt_len=12, output_len=3)
     exA.prefill(t)
@@ -201,35 +189,28 @@ def test_paged_chunked_out_of_pages_mid_chunk_resumes(tiny_cfg):
     ex.pool.free(999)                     # pressure clears
     ms, done = ex.prefill_chunk(t, 99)    # resume the remaining 4 tokens
     assert done
-    np.testing.assert_allclose(ex.last_prefill_logits,
-                               exA.last_prefill_logits, atol=1e-5, rtol=0)
+    assert_logits_close(ex.last_prefill_logits, exA.last_prefill_logits)
 
 
 @pytest.mark.parametrize("chunk", [1, 3, 8, 32])
 def test_slot_executor_chunk_sizes_equivalent(tiny_cfg, chunk):
     """Logit equivalence holds for every chunk size, including chunk=1
     (decode-granular) and chunk >= prompt (degenerates to atomic)."""
-    from repro.serving.executor import JaxExecutor
-
-    exA = JaxExecutor(tiny_cfg, max_slots=2, max_seq=64, seed=0)
-    exC = JaxExecutor(tiny_cfg, params=exA.params, max_slots=2, max_seq=64,
-                      seed=0, prefill_chunk_size=chunk)
+    exA = make_slot_engine(tiny_cfg, max_slots=2)
+    exC = make_slot_engine(tiny_cfg, params=exA.params, max_slots=2,
+                           prefill_chunk_size=chunk)
     t = qa_task(prompt_len=11, output_len=4)
     exA.prefill(t)
     done = False
     while not done:
         ms, done = exC.prefill_chunk(t, chunk)
-    np.testing.assert_allclose(exC.last_prefill_logits,
-                               exA.last_prefill_logits, atol=1e-5, rtol=0)
+    assert_logits_close(exC.last_prefill_logits, exA.last_prefill_logits)
 
 
 def test_chunked_prefill_rejects_ssm_archs():
-    from repro.configs import get_config
-    from repro.serving.executor import JaxExecutor
-
-    cfg = get_config("mamba2-780m").reduced()
     with pytest.raises(ValueError):
-        JaxExecutor(cfg, max_slots=2, max_seq=64, prefill_chunk_size=8)
+        make_slot_engine(reduced_cfg("mamba2-780m"), max_slots=2,
+                         prefill_chunk_size=8)
 
 
 # --------------------------------------------------------- scheduler + loop

@@ -12,6 +12,8 @@ from repro.core.task import SLOSpec, Task, control_task, qa_task
 from repro.serving.kv_pool import KVPagePool, OutOfPages
 from repro.serving.kv_swap import HostArenaFull, KVSwapArena
 
+from helpers import assert_logits_close, make_paged_engine, reduced_cfg
+
 LAT = paper_fig1_model()
 
 
@@ -352,20 +354,15 @@ def test_fastserve_prunes_dropped_task_bookkeeping():
 
 @pytest.fixture(scope="module")
 def tiny_cfg():
-    from repro.configs import get_config
-    return get_config("smollm-360m").reduced()
+    return reduced_cfg()
 
 
 def test_paged_executor_suspend_resume_matches_logits(tiny_cfg):
     """Acceptance: decode across a suspend/resume cycle reproduces the
     never-suspended executor's logits to < 1e-5; zero pages and zero host
     bytes leaked afterwards; HostArenaFull rolls a suspension back."""
-    from repro.serving.executor import PagedJaxExecutor
-
-    exA = PagedJaxExecutor(tiny_cfg, n_pages=16, page_size=16, max_seq=64,
-                           seed=0, max_batch=4)
-    exB = PagedJaxExecutor(tiny_cfg, params=exA.params, n_pages=16,
-                           page_size=16, max_seq=64, seed=0, max_batch=4)
+    exA = make_paged_engine(tiny_cfg, page_size=16)
+    exB = make_paged_engine(tiny_cfg, params=exA.params, page_size=16)
     tasks = [qa_task(output_len=8, prompt_len=18) for _ in range(2)]
     for t in tasks:
         exA.prefill(t)
@@ -374,8 +371,7 @@ def test_paged_executor_suspend_resume_matches_logits(tiny_cfg):
     def step(subset):
         exA.decode([tasks[i] for i in subset])
         exB.decode([tasks[i] for i in subset])
-        np.testing.assert_allclose(exA.last_logits, exB.last_logits,
-                                   atol=1e-5, rtol=0)
+        assert_logits_close(exA.last_logits, exB.last_logits)
 
     step([0, 1])
     exA.suspend(tasks[0])

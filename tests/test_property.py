@@ -261,6 +261,134 @@ def test_radix_pool_interleavings_no_leaks_no_aliasing(data):
     pool.check()
 
 
+@given(st.data())
+@settings(max_examples=60, deadline=None)
+def test_sharded_slab_interleavings_no_leaks_no_cross_device_aliasing(data):
+    """DESIGN.md §9 safety, modelled: under tensor parallelism the page
+    table is ONE replicated structure addressing NDEV per-device head
+    slabs, and every write lands in lockstep at the same physical page on
+    each device (GSPMD keeps the shards in step because they flow through
+    one jitted computation). Random interleavings of new / free / fork /
+    swap_out / swap_in / match / evict must therefore keep every device's
+    slab consistent with the owner's tokens, and no slab may ever hold
+    another device's head shard (contents are device-tagged; a transposed
+    or misrouted swap scatter would surface as a foreign tag). One pool
+    services all slabs, so zero leaks on the shared table means zero
+    leaks on every device."""
+    from repro.serving.kv_pool import KVPagePool, OutOfPages
+    from repro.serving.prefix_cache import RadixPrefixCache
+
+    PSZ, NDEV = 2, 4
+    pool = KVPagePool(n_pages=16, page_size=PSZ)
+    cache = RadixPrefixCache(pool, max_pages=8)
+    # per-device slab: phys page -> (device_tag, tokens) — the tag models
+    # "which head shard lives here"
+    slabs = [{} for _ in range(NDEV)]
+    owners = {}
+    swapped = {}         # owner -> {logical idx: [per-device contents]}
+    next_owner = 0
+    token = st.integers(0, 1)
+
+    def write(p, toks):
+        for d in range(NDEV):
+            slabs[d][p] = (d, toks)
+
+    ops = data.draw(st.lists(st.sampled_from(
+        ["new", "free", "fork", "evict", "match", "swap_out", "swap_in"]),
+        min_size=1, max_size=30))
+    for op in ops:
+        if op == "new":
+            toks = tuple(data.draw(
+                st.lists(token, min_size=1, max_size=6), label="prompt"))
+            o, next_owner = next_owner, next_owner + 1
+            hit, pages = cache.acquire(o, toks, max_tokens=len(toks) - 1)
+            for i, p in enumerate(pages):
+                for d in range(NDEV):       # replicated table, all slabs hit
+                    assert slabs[d][p] == (d, toks[i * PSZ:(i + 1) * PSZ])
+            try:
+                if hit:
+                    pool.extend(o, len(toks))
+                else:
+                    pool.alloc(o, len(toks))
+            except OutOfPages:
+                pool.free(o)
+                pool.check()
+                continue
+            tbl = pool.page_table(o)
+            for li in range(hit // PSZ, len(tbl)):
+                write(tbl[li], toks[li * PSZ:(li + 1) * PSZ])
+            owners[o] = toks
+            nfull = len(toks) // PSZ
+            cache.insert(toks[:nfull * PSZ], tbl[:nfull])
+        elif op == "free" and owners:
+            o = data.draw(st.sampled_from(sorted(owners)), label="free")
+            pool.free(o)
+            del owners[o]
+            swapped.pop(o, None)
+        elif op == "swap_out" and set(owners) - set(swapped):
+            o = data.draw(st.sampled_from(
+                sorted(set(owners) - set(swapped))), label="swap_out")
+            host = {}
+            for li, p in pool.swap_out(o):  # gather EVERY device's shard
+                host[li] = [slabs[d][p] for d in range(NDEV)]
+            swapped[o] = host
+        elif op == "swap_in" and swapped:
+            o = data.draw(st.sampled_from(sorted(swapped)), label="swap_in")
+            try:
+                restored = pool.swap_in(o)
+            except OutOfPages:
+                pool.check()
+                continue
+            host = swapped.pop(o)
+            assert sorted(li for li, _ in restored) == sorted(host)
+            for li, p in restored:          # scatter each shard back to
+                for d in range(NDEV):       # ITS OWN device's slab
+                    slabs[d][p] = host[li][d]
+        elif op == "fork" and set(owners) - set(swapped):
+            o = data.draw(st.sampled_from(
+                sorted(set(owners) - set(swapped))), label="fork")
+            tbl = pool.page_table(o)
+            li = data.draw(st.integers(0, len(tbl) - 1), label="page")
+            try:
+                forked = pool.fork(o, li)
+            except OutOfPages:
+                forked = None
+            if forked is not None:          # CoW copies stay device-local
+                for d in range(NDEV):
+                    slabs[d][forked[1]] = slabs[d][forked[0]]
+        elif op == "evict":
+            cache.evict(1)
+        elif op == "match":
+            toks = tuple(data.draw(
+                st.lists(token, min_size=0, max_size=6), label="query"))
+            n, pages = cache.match(toks)
+            assert n == len(pages) * PSZ
+            for i, p in enumerate(pages):
+                for d in range(NDEV):
+                    assert slabs[d][p] == (d, toks[i * PSZ:(i + 1) * PSZ])
+        pool.check()                        # one table -> clean everywhere
+        for d in range(NDEV):               # no cross-device head aliasing
+            for p, (tag, _) in slabs[d].items():
+                assert tag == d, f"device {d} slab holds device {tag} shard"
+        for o, toks in owners.items():
+            if o in swapped:
+                for li, shards in swapped[o].items():
+                    for d, (tag, got) in enumerate(shards):
+                        assert tag == d
+                        assert got == toks[li * PSZ: li * PSZ + len(got)]
+                continue
+            for li, p in enumerate(pool.page_table(o)):
+                for d in range(NDEV):
+                    tag, got = slabs[d][p]
+                    assert tag == d
+                    assert got == toks[li * PSZ: li * PSZ + len(got)]
+    for o in list(owners):
+        pool.free(o)
+    cache.clear()
+    assert pool.used_pages == 0             # zero leaks on the shared table
+    pool.check()
+
+
 @given(st.integers(1, 64), st.integers(1, 64))
 @settings(deadline=None, max_examples=30)
 def test_jax_mask_matrix_matches_numpy(v0, n):

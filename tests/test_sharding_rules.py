@@ -1,0 +1,98 @@
+"""launch/sharding.py divisibility fallbacks, asserted directly in tier-1
+(previously only exercised transitively via the dry-run): jit INPUT
+shardings require exact divisibility, so every rule must degrade — odd
+padded vocab -> d_model-sharded embedding, non-divisible KV heads ->
+replicated page slabs, nothing-divides -> full replication — without ever
+producing an invalid spec.
+
+param_specs/page_specs only read ``mesh.shape`` (a dict), so a
+SimpleNamespace stands in for a real Mesh: no devices needed, the rules
+are pure functions of (config, axis sizes)."""
+import dataclasses
+import types
+
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.sharding import _div, page_specs, param_specs
+
+from helpers import reduced_cfg
+
+
+def fake_mesh(model: int, data: int = 1):
+    return types.SimpleNamespace(shape={"data": data, "model": model},
+                                 axis_names=("data", "model"))
+
+
+# ------------------------------------------------------------- padded_vocab
+
+def test_padded_vocab_values():
+    cfg = reduced_cfg()
+    assert cfg.padded_vocab == cfg.vocab_size        # 1024 % 16 == 0
+    odd = dataclasses.replace(cfg, vocab_size=122753)
+    assert odd.padded_vocab == 122880                # next 2048 multiple
+    assert odd.padded_vocab % 2048 == 0
+    assert _div(odd.padded_vocab, 16)
+
+
+# -------------------------------------------------------------- param_specs
+
+def test_divisible_vocab_shards_embedding_over_vocab():
+    cfg = reduced_cfg()                              # V=1024, D=256
+    spec = param_specs(cfg, fake_mesh(4), train=False)
+    assert spec["embed"] == P("model", None)         # serving: no FSDP dim
+
+
+def test_odd_vocab_falls_back_to_d_model_sharded_embedding():
+    # padded_vocab 48 stays 48 (divisible by 16) but NOT by 32 ways;
+    # d_model 256 is, so the rule swaps the sharded dim
+    cfg = dataclasses.replace(reduced_cfg(), vocab_size=48)
+    assert cfg.padded_vocab == 48
+    spec = param_specs(cfg, fake_mesh(32), train=False)
+    assert spec["embed"] == P(None, "model")
+    if "lm_head" in spec:
+        assert spec["lm_head"] == P("model", None)
+
+
+def test_nothing_divides_falls_back_to_full_replication():
+    # 7 ways divides neither padded vocab 1024 nor d_model 256 nor d_ff:
+    # every rule must land on a valid, fully-replicated spec
+    cfg = reduced_cfg()
+    spec = param_specs(cfg, fake_mesh(7), train=False)
+    assert spec["embed"] == P(None, None)
+    flat = []
+
+    def walk(x):
+        if isinstance(x, P):
+            flat.append(x)
+        elif isinstance(x, dict):
+            for v in x.values():
+                walk(v)
+
+    walk(spec)
+    assert flat and all(all(ax is None for ax in s) for s in flat)
+
+
+def test_attention_projections_shard_head_dim_when_divisible():
+    cfg = reduced_cfg()                              # q_dim 128, kv_dim 32
+    blk = param_specs(cfg, fake_mesh(4), train=False)["blocks"]
+    assert blk["wq"] == P(None, None, "model")       # column-parallel
+    assert blk["wo"] == P(None, "model", None)       # row-parallel pair
+
+
+# --------------------------------------------------------------- page_specs
+
+def test_page_specs_shard_kv_heads_when_divisible():
+    cfg = dataclasses.replace(reduced_cfg(), n_kv_heads=4)
+    spec = page_specs(cfg, fake_mesh(4))
+    assert spec["k_pages"] == P(None, None, "model", None, None)
+    assert spec["v_pages"] == spec["k_pages"]
+
+
+def test_page_specs_replicate_on_non_divisible_kv_heads():
+    cfg = reduced_cfg()                              # GQA: n_kv_heads == 1
+    assert cfg.n_kv_heads == 1
+    spec = page_specs(cfg, fake_mesh(4))
+    assert spec["k_pages"] == P(None, None, None, None, None)
+    # but a 1-way axis always divides: degenerate mesh shards trivially
+    assert page_specs(cfg, fake_mesh(1))["k_pages"] == \
+        P(None, None, "model", None, None)

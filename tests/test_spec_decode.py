@@ -9,6 +9,8 @@ from repro.core.task import control_task, qa_task
 from repro.serving.kv_pool import KVPagePool
 from repro.serving.spec_decode import depth_bucket, greedy_accept
 
+from helpers import drive_plain, make_paged_engine, reduced_cfg
+
 LAT = paper_fig1_model()
 
 
@@ -283,10 +285,9 @@ def test_paged_verify_kernel_matches_oracle(B, C, Hq, Hkv, psz, maxp, hd):
 def test_verify_step_single_token_matches_decode_step():
     """C=1 verify (no drafts) must reproduce decode_step_paged's logits —
     the bridge that makes greedy equivalence an identity, not a hope."""
-    from repro.configs import get_config
     from repro.models import model as M
 
-    cfg = get_config("smollm-360m").reduced()
+    cfg = reduced_cfg()
     params = M.init_params(cfg, jax.random.PRNGKey(3))
     pages = M.init_paged_cache(cfg, n_pages=6, page_size=4)
     pt = jnp.asarray([[0, 2, -1], [1, 3, -1]], jnp.int32)
@@ -309,30 +310,17 @@ def test_verify_step_single_token_matches_decode_step():
 
 @pytest.fixture(scope="module")
 def spec_engines():
-    from repro.configs import get_config
     from repro.models import model as M
-    from repro.serving.executor import PagedJaxExecutor
 
-    cfg = get_config("smollm-360m").reduced()
+    cfg = reduced_cfg()
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     # self-draft (target's own params): proposals == target greedy, so
     # acceptance is total unless a test corrupts the window
-    exA = PagedJaxExecutor(cfg, params=params, n_pages=32, page_size=8,
-                           max_seq=96, seed=0, max_batch=4,
-                           spec_decode=True, draft_cfg=cfg,
-                           draft_params=params, max_spec_depth=4)
-    exB = PagedJaxExecutor(cfg, params=params, n_pages=32, page_size=8,
-                           max_seq=96, seed=0, max_batch=4)
+    exA = make_paged_engine(cfg, params=params, n_pages=32, max_seq=96,
+                            spec_decode=True, draft_cfg=cfg,
+                            draft_params=params, max_spec_depth=4)
+    exB = make_paged_engine(cfg, params=params, n_pages=32, max_seq=96)
     return cfg, params, exA, exB
-
-
-def _drive_plain(exB, tasks, n_steps):
-    streams = {t.task_id: [exB.last_tok[t.task_id]] for t in tasks}
-    for _ in range(n_steps):
-        exB.decode(tasks)
-        for t in tasks:
-            streams[t.task_id].append(exB.last_tok[t.task_id])
-    return streams
 
 
 def test_engine_greedy_equivalence_across_buckets_and_suspend(spec_engines):
@@ -366,7 +354,7 @@ def test_engine_greedy_equivalence_across_buckets_and_suspend(spec_engines):
                 exA.decode(tasks[1:], [2, 2])       # history survives
                 exA.resume(tasks[0])
         need = max(len(exA.generated_tokens(t)) for t in tasks)
-        streams = _drive_plain(exB, tasks, need)
+        streams = drive_plain(exB, tasks, need)
         for t in tasks:
             a = exA.generated_tokens(t)
             b = streams[t.task_id]
@@ -389,19 +377,15 @@ def test_engine_spec_respects_shared_prefix_pages():
     """Rejected drafts never touch shared/pinned prefix pages: two tasks
     of one prefix group decode speculatively; the sharer's stream and the
     radix/pool invariants survive every window."""
-    from repro.configs import get_config
     from repro.models import model as M
-    from repro.serving.executor import PagedJaxExecutor
 
-    cfg = get_config("smollm-360m").reduced()
+    cfg = reduced_cfg()
     params = M.init_params(cfg, jax.random.PRNGKey(1))
-    ex = PagedJaxExecutor(cfg, params=params, n_pages=32, page_size=8,
-                          max_seq=96, seed=0, max_batch=4,
-                          prefix_cache=True, spec_decode=True,
-                          draft_cfg=cfg, draft_params=params,
-                          max_spec_depth=2)
-    exr = PagedJaxExecutor(cfg, params=params, n_pages=32, page_size=8,
-                           max_seq=96, seed=0, max_batch=4)
+    ex = make_paged_engine(cfg, params=params, n_pages=32, max_seq=96,
+                           prefix_cache=True, spec_decode=True,
+                           draft_cfg=cfg, draft_params=params,
+                           max_spec_depth=2)
+    exr = make_paged_engine(cfg, params=params, n_pages=32, max_seq=96)
     tasks = []
     for _ in range(2):
         t = qa_task(output_len=16, prompt_len=20)
@@ -414,7 +398,7 @@ def test_engine_spec_respects_shared_prefix_pages():
         ex.decode(tasks, [2, 1] if it % 2 else [1, 2])
         ex.pool.check()
     need = max(len(ex.generated_tokens(t)) for t in tasks)
-    streams = _drive_plain(exr, tasks, need)
+    streams = drive_plain(exr, tasks, need)
     for t in tasks:
         a = ex.generated_tokens(t)
         b = streams[t.task_id]
