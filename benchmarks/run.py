@@ -52,6 +52,15 @@ GATES = [
     ("sharded_serving", ("engine", "equiv_ok"), "high", 0.0),
     ("sharded_serving", ("engine", "pages_leaked"), "low", 0.0),
     ("sharded_serving", ("engine", "n_devices"), "high", 0.0),
+    # gate 6: async pipelining — structural only (byte-identical decisions
+    # and streams, strict host-gap win, background swap overlap, no leaks);
+    # the ms numbers themselves are runner-speed and not gated
+    ("async_pipeline", ("engine", "decisions_equal"), "high", 0.0),
+    ("async_pipeline", ("engine", "streams_equal"), "high", 0.0),
+    ("async_pipeline", ("engine", "host_gap_reduced"), "high", 0.0),
+    ("async_pipeline", ("engine", "swap_overlapped"), "high", 0.0),
+    ("async_pipeline", ("engine", "pages_leaked"), "low", 0.0),
+    ("async_pipeline", ("engine", "transfers_outstanding"), "low", 0.0),
 ]
 
 
@@ -124,7 +133,7 @@ def main() -> None:
                     help="skip real-JAX-engine measurements (faster)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig1,table2,fig7,fig10,"
-                         "fig11,kv,prefill,prefix,swap,spec,sharded")
+                         "fig11,kv,prefill,prefix,swap,spec,sharded,async")
     ap.add_argument("--tiny", action="store_true",
                     help="CI smoke configs for the benches that have one")
     ap.add_argument("--check", action="store_true",
@@ -140,8 +149,8 @@ def main() -> None:
                  "(baselines are recorded at the tiny CI config)")
     only = set(args.only.split(",")) if args.only else None
 
-    from benchmarks import (dynamic_slo, kv_pressure, kv_swap,
-                            latency_vs_batch, prefill_interference,
+    from benchmarks import (async_pipeline, dynamic_slo, kv_pressure,
+                            kv_swap, latency_vs_batch, prefill_interference,
                             prefix_sharing, ratio_sweep, sharded_serving,
                             spec_decode, static_tpot, workload_sweep)
 
@@ -170,6 +179,8 @@ def main() -> None:
         spec_decode.run(tiny=args.tiny, engine=not args.skip_engine)
     if only is None or "sharded" in only:
         sharded_serving.run(tiny=args.tiny)
+    if only is None or "async" in only:
+        async_pipeline.run(tiny=args.tiny)
     print(f"total_wall_s,{time.time() - t0:.1f},", flush=True)
 
     ran = {"prefill_interference"} if only is None or "prefill" in only else set()
@@ -181,6 +192,8 @@ def main() -> None:
         ran.add("spec_decode")
     if only is None or "sharded" in only:
         ran.add("sharded_serving")
+    if only is None or "async" in only:
+        ran.add("async_pipeline")
     if args.update_baselines:
         update_baselines(sorted(ran & set(_gated_benches())))
     if args.check:

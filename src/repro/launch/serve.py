@@ -36,6 +36,12 @@ mesh (see dryrun.py for the lowering proof).
   # here, real chips on TPU
   PYTHONPATH=src python -m repro.launch.serve --executor paged \
       --mesh-shape 1,4
+
+  # async pipelined engine (DESIGN.md §10): dispatch-ahead double
+  # buffering — host scheduling and KV-swap I/O overlap device compute,
+  # byte-identical streams to the synchronous reference
+  PYTHONPATH=src python -m repro.launch.serve --executor paged \
+      --async-pipeline
 """
 from __future__ import annotations
 
@@ -93,6 +99,14 @@ def main():
     ap.add_argument("--shared-prefix-frac", type=float, default=0.0,
                     help="fraction of workload tasks opening with a shared "
                          "system prompt from a per-seed prefix pool")
+    ap.add_argument("--async-pipeline", action="store_true",
+                    help="paged executor: dispatch-ahead pipelining "
+                         "(DESIGN.md §10) — decode cycles are enqueued "
+                         "without blocking on device results; sampling "
+                         "and bookkeeping land at commit time, KV-swap "
+                         "transfers overlap decode on a background "
+                         "worker. Streams and metrics stay byte-"
+                         "identical to the synchronous engine")
     ap.add_argument("--mesh-shape", default=None,
                     help="paged executor: 'data,model' serving mesh, e.g. "
                          "1,4 — shards weights + the KV page arena over "
@@ -161,6 +175,9 @@ def main():
     if args.spec_decode and args.scheduler != "slice":
         raise SystemExit("--spec-decode requires --scheduler slice "
                          "(depth grants come from the Eq. 7 headroom)")
+    if args.async_pipeline and args.executor != "paged":
+        raise SystemExit("--async-pipeline requires --executor paged "
+                         "(the dispatch queue rides the paged engine)")
     page_budget = None
     prefix_hint = None
     n_pages = args.pages or (args.slots * args.max_seq) // args.page_size
@@ -183,7 +200,8 @@ def main():
                               spec_decode=args.spec_decode,
                               draft_cfg=draft_cfg,
                               max_spec_depth=args.spec_depth,
-                              mesh=mesh)
+                              mesh=mesh,
+                              async_dispatch=args.async_pipeline)
         page_budget = ex.page_budget()
         if args.prefix_cache:
             prefix_hint = ex.cached_prompt_tokens
@@ -245,10 +263,16 @@ def main():
     spec_note = (f" spec_extra={res.spec_extra_tokens} "
                  f"accepted={res.accepted_tokens}/{res.drafted_tokens}"
                  if args.spec_decode else "")
+    pipe_note = (f" host_gap={res.dispatch_ms + res.wait_ms:.1f}ms "
+                 f"(dispatch={res.dispatch_ms:.1f} wait={res.wait_ms:.1f} "
+                 f"swap_overlap={res.swap_overlap_ms:.1f}) "
+                 f"stalls={res.pipeline_stalls}"
+                 if args.async_pipeline else "")
     print(f"{args.scheduler}: n={s['all'].n} SLO={s['all'].slo:.1%} "
           f"RT={s['realtime'].slo:.1%} nRT={s['non_realtime'].slo:.1%} "
           f"decode_iters={res.decode_iterations} "
-          f"prefill_chunks={res.prefill_chunks}{swap_note}{spec_note}")
+          f"prefill_chunks={res.prefill_chunks}"
+          f"{swap_note}{spec_note}{pipe_note}")
 
 
 if __name__ == "__main__":

@@ -41,9 +41,21 @@ back rejected-draft pages (``KVPagePool.truncate``) — the committed
 stream is identical to non-speculative greedy decode. SimExecutor prices
 draft+verify through the LatencyModel spec terms and samples acceptance
 from persistent per-task streams.
+
+Async pipelining (DESIGN.md §10): with ``async_dispatch=True`` the paged
+executor stops forcing per-step syncs — decode/prefill dispatch their XLA
+calls and return immediately, the in-flight results ride a bounded
+DispatchQueue (serving.pipeline), next-step tokens chain on-device
+through per-row argmax scalars, and swap gathers materialize on a
+background thread tracked by a TransferLedger. Observation surfaces
+(``last_tok``/``last_logits``/``last_commits``/…) are commit-forcing
+properties, so every caller sees exactly the synchronous engine's values
+— byte-identical greedy streams (tests/test_async_engine.py) — just
+later. The default stays sync: the reference all regression gates pin.
 """
 from __future__ import annotations
 
+import contextlib
 import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -54,6 +66,8 @@ from repro.core.selection import PageBudget
 from repro.core.task import Task
 from repro.serving.kv_pool import KVPagePool, OutOfPages
 from repro.serving.kv_swap import HostArenaFull, KVSwapArena
+from repro.serving.pipeline import (DispatchQueue, GapStats, PendingStep,
+                                    TransferLedger)
 
 
 _PREFILL_PRIOR = [(64, 10.0), (512, 40.0)]   # prefill ms prior until measured
@@ -596,7 +610,8 @@ class PagedJaxExecutor(Executor):
                  host_arena_bytes: Optional[int] = None,
                  spec_decode: bool = False, draft_cfg=None,
                  draft_params=None, max_spec_depth: int = 4,
-                 mesh=None):
+                 mesh=None, async_dispatch: bool = False,
+                 max_in_flight: int = 2):
         import jax
         import jax.numpy as jnp
         from repro.models import model as M
@@ -659,9 +674,43 @@ class PagedJaxExecutor(Executor):
                 self.params, shard_rules.to_shardings(
                     mesh, shard_rules.param_specs(cfg, mesh, train=False)))
             self.pages = jax.device_put(self.pages, self._page_sh)
-        self.last_tok: Dict[int, int] = {}
-        self.last_logits: Optional[np.ndarray] = None
-        self.last_prefill_logits: Optional[np.ndarray] = None
+        self._last_tok: Dict[int, int] = {}
+        self._last_logits: Optional[np.ndarray] = None
+        self._last_prefill_logits: Optional[np.ndarray] = None
+        # lazy device-side sources for the two logits surfaces: commits
+        # park the device array here and the property materializes it on
+        # first read, so a pipelined run never pays [b, vocab] host copies
+        # for logits nobody looks at
+        self._last_logits_src = None
+        self._last_prefill_logits_src = None
+        # Async pipelining (DESIGN.md §10). The queue/ledger/stats exist in
+        # both modes — sync books its blocking time straight into wait_ms,
+        # async splits dispatch from commit — so the loop and benchmarks
+        # read one surface regardless of mode.
+        self.async_dispatch = async_dispatch
+        self._sync_depth = 0          # _sync_mode() nesting (latency probes)
+        self.gap_stats = GapStats()
+        self.ledger = TransferLedger()
+        self._queue = DispatchQueue(self._commit_step,
+                                    max_in_flight=max_in_flight,
+                                    rollback=self._rollback_step,
+                                    stats=self.gap_stats)
+        # device-resident last-token chain links: tid -> (argmax array,
+        # row) into an in-flight step's lazy per-row argmax, so cycle
+        # N+1's decode chains on-device off cycle N without a host
+        # round-trip. _last_am remembers the newest decode's (ids, bucket,
+        # argmax) so the steady state (same batch, same order) passes the
+        # whole array through as the next token vector — zero per-row ops.
+        self._tok_dev: Dict[int, Any] = {}
+        self._last_am: Optional[Tuple[Tuple[int, ...], int, Any]] = None
+        # step-input device cache (async steady state): name -> (batch
+        # key, host truth snapshot, device copy). Reused only when the
+        # freshly built host truth still equals the snapshot, so stale
+        # entries can never change results — they just cost a re-upload.
+        self._in_cache: Dict[str, Tuple[Any, np.ndarray, Any]] = {}
+        self._argmax_jit = jax.jit(
+            lambda l: jnp.argmax(l, -1).astype(jnp.int32))
+        self._swap_pool = None        # lazy background transfer worker
         self._step_jit: Dict[int, Any] = {}
         self._build_steps()
         self._chunk_jit: Dict[int, Any] = {}
@@ -680,8 +729,8 @@ class PagedJaxExecutor(Executor):
         self.draft = None
         self.spec_depth = 0
         self.spec_steps = 0
-        self.accepted_tokens = 0
-        self.last_commits: Optional[List[int]] = None
+        self._accepted_tokens = 0
+        self._last_commits: Optional[List[int]] = None
         self._gen: Dict[int, List[int]] = {}     # committed generated toks
         self._verify_jit: Dict[Tuple[int, int], Any] = {}
         if spec_decode:
@@ -721,21 +770,201 @@ class PagedJaxExecutor(Executor):
         if self.mesh is not None:
             self.pages = self.jax.device_put(self.pages, self._page_sh)
 
-    def _lower(self, fn, example_args, pages_out: bool = False):
+    def _lower(self, fn, example_args, pages_out: bool = False,
+               extra_repl: int = 0):
         """AOT-compile ``fn`` against example args. In mesh mode the
         lowering runs inside the mesh + activation_partitioning context
         (the dryrun.py idiom) so sharded params/pages and the shard()
         constraints in the model code take effect; ``pages_out`` pins the
-        (logits, pages) output to (replicated, canonical page sharding),
-        keeping self.pages stable across steps."""
+        (logits, *extras, pages) output to (replicated..., canonical page
+        sharding), keeping self.pages stable across steps. ``extra_repl``
+        counts replicated outputs between logits and pages (the decode
+        step's fused argmax)."""
         jax = self.jax
         if self.mesh is None:
             return jax.jit(fn).lower(*example_args).compile()
         from repro.models.partitioning import activation_partitioning
-        out_sh = (self._repl_sh, self._page_sh) if pages_out else None
+        out_sh = ((self._repl_sh,) * (1 + extra_repl) + (self._page_sh,)
+                  if pages_out else None)
         with self.mesh, activation_partitioning(self._batch_axes, "model"):
             return jax.jit(fn, out_shardings=out_sh).lower(
                 *example_args).compile()
+
+    # -- async pipelining (DESIGN.md §10) --
+    def _async_on(self) -> bool:
+        return self.async_dispatch and self._sync_depth == 0
+
+    @contextlib.contextmanager
+    def _sync_mode(self):
+        """Force synchronous semantics for a block — latency-model probes
+        must measure real step time, not dispatch-only time."""
+        self._commit_pending()
+        self._sync_depth += 1
+        try:
+            yield
+        finally:
+            self._sync_depth -= 1
+
+    def _commit_pending(self) -> None:
+        q = getattr(self, "_queue", None)
+        if q is not None and len(q):
+            q.commit_all()
+
+    def _cached_in(self, name: str, key, host: np.ndarray):
+        """Reuse the previous cycle's device copy of a step input when
+        the freshly built host truth is unchanged — steady-state
+        dispatch-ahead cycles then run transfer-free, chaining tokens
+        and lengths off the step's own fused outputs."""
+        ent = self._in_cache.get(name)
+        if ent is not None and ent[0] == key and np.array_equal(ent[1], host):
+            return ent[2]
+        dev = self._dev_in(host)
+        self._in_cache[name] = (key, host, dev)
+        return dev
+
+    def _push(self, step: PendingStep) -> float:
+        """Enqueue a dispatched step; returns the ms the push spent
+        committing older steps (the stall path). That time is already
+        booked as ``wait_ms`` by the queue, so dispatch-site timers must
+        subtract it or host_gap would double-count every stall."""
+        w0 = self.gap_stats.wait_ms
+        self._queue.push(step)
+        return self.gap_stats.wait_ms - w0
+
+    def drain(self) -> None:
+        """Commit every in-flight step and wait out background transfers —
+        the end-of-run barrier the serving loop issues before reading
+        final metrics."""
+        self._commit_pending()
+        self.ledger.wait()
+
+    def _commit_step(self, step: PendingStep) -> None:
+        """Observe one in-flight step's device results (the only sync
+        point in async mode) and apply its deferred host-state updates.
+        Runs in dispatch order via the DispatchQueue."""
+        p = step.payload
+        if step.kind == "prefill":
+            tid = p["tid"]
+            # only the argmax scalar must land now (the first-token chain);
+            # the full logits row stays on device until someone actually
+            # reads last_prefill_logits (lazy materialization — copying
+            # [1, vocab] per commit would serialize host on the transfer)
+            arr, r = p["tok_dev"][tid]
+            self._last_prefill_logits = None
+            self._last_prefill_logits_src = p["logits"]
+            self._set_first_token(tid, int(np.asarray(arr)[r]))
+            self._pop_tok_dev(tid, p["tok_dev"].get(tid))
+        elif step.kind == "decode":
+            ids = step.task_ids
+            self._last_logits = None
+            self._last_logits_src = (p["logits"], len(ids))
+            toks = np.asarray(p["argmax"])[: len(ids)]
+            for i, tok in zip(ids, toks):
+                self._last_tok[i] = int(tok)
+                self._pop_tok_dev(i, p["tok_dev"].get(i))
+                self._gen.setdefault(i, []).append(int(tok))
+            self._last_commits = [1] * len(ids)
+        elif step.kind == "verify":
+            self._commit_verify(step)
+        else:  # pragma: no cover - future step kinds
+            raise ValueError(f"unknown pending step kind {step.kind!r}")
+
+    def _pop_tok_dev(self, tid: int, entry) -> None:
+        """Drop the in-flight chain link this step registered — but only
+        if a later in-flight step has not already replaced it (identity
+        check): commits must never erase a newer chain link."""
+        if entry is not None and self._tok_dev.get(tid) is entry:
+            del self._tok_dev[tid]
+
+    def _rollback_step(self, step: PendingStep) -> None:
+        """Drain-on-error: rewind the pool-side reservations an
+        uncommitted step made at dispatch, newest first, so a poisoned
+        pipeline suffix leaves committed state consistent. Device results
+        are simply dropped (functional arrays — nothing to undo)."""
+        p = step.payload
+        if step.kind == "prefill":
+            tid = p["tid"]
+            if p.get("fresh"):          # this dispatch allocated the task
+                if self.pool.holds(tid):
+                    self.pool.free(tid)
+                self._chunk_progress.pop(tid, None)
+            elif "pre_len" in p and self.pool.holds(tid):
+                self.pool.truncate(tid, p["pre_len"])
+                if "pre_progress" in p:
+                    self._chunk_progress[tid] = p["pre_progress"]
+            self._pop_tok_dev(tid, p["tok_dev"].get(tid))
+        else:
+            for i, ln in p.get("pre_lengths", {}).items():
+                if self.pool.holds(i):
+                    self.pool.truncate(i, ln)
+                self._pop_tok_dev(i, p["tok_dev"].get(i))
+                if step.kind == "verify" and self.draft is not None:
+                    self.draft.drop(i)
+
+    def _chain_tok(self, tid: int):
+        """Next-step input token for ``tid``: a lazy scalar sliced from the
+        in-flight argmax when one exists (cycle N+1 chaining off cycle
+        N's un-observed logits), else the committed host value."""
+        e = self._tok_dev.get(tid)
+        if e is not None:
+            arr, r = e
+            return arr[r]
+        return np.int32(self._last_tok[tid])
+
+    def _chain_vector(self, ids: List[int], b: int):
+        """Steady-state fast path: when the previous in-flight decode had
+        the same tasks in the same rows at the same bucket, its argmax
+        array IS the next token vector (pad rows carry stale argmaxes —
+        inert under the active mask). Returns None when any link went
+        stale (commit, suspend, finish, reorder) — callers fall back to
+        per-row chaining."""
+        prev = self._last_am
+        if prev is None:
+            return None
+        pids, pb, am = prev
+        if pb != b or pids != tuple(ids):
+            return None
+        for r, i in enumerate(ids):
+            e = self._tok_dev.get(i)
+            if e is None or e[0] is not am or e[1] != r:
+                return None
+        return am
+
+    # observation surfaces: reading any of them forces the pending
+    # pipeline to commit, so callers (loop, tests, benchmarks) always see
+    # exactly the synchronous engine's values — the byte-identity contract
+    @property
+    def last_tok(self) -> Dict[int, int]:
+        self._commit_pending()
+        return self._last_tok
+
+    @property
+    def last_logits(self) -> Optional[np.ndarray]:
+        self._commit_pending()
+        if self._last_logits_src is not None:
+            arr, n = self._last_logits_src
+            self._last_logits = np.asarray(arr)[:n]
+            self._last_logits_src = None
+        return self._last_logits
+
+    @property
+    def last_prefill_logits(self) -> Optional[np.ndarray]:
+        self._commit_pending()
+        if self._last_prefill_logits_src is not None:
+            self._last_prefill_logits = np.asarray(
+                self._last_prefill_logits_src)
+            self._last_prefill_logits_src = None
+        return self._last_prefill_logits
+
+    @property
+    def last_commits(self) -> Optional[List[int]]:
+        self._commit_pending()
+        return self._last_commits
+
+    @property
+    def accepted_tokens(self) -> int:
+        self._commit_pending()
+        return self._accepted_tokens
 
     # -- compiled steps (one per power-of-two batch bucket) --
     def _build_steps(self):
@@ -743,9 +972,16 @@ class PagedJaxExecutor(Executor):
         cfg, maxp = self.cfg, self.max_pages_per_seq
 
         def step(params, pages, pt, lengths, tokens, active):
-            return M.decode_step_paged(cfg, params, pages, pt, lengths,
-                                       tokens, active,
-                                       use_kernel=self.use_paged_kernel)
+            # fused argmax + next-lengths: one compiled call yields the
+            # next-token vector AND next cycle's length vector, so the
+            # async chain feeds both straight back in (DESIGN.md §10) —
+            # no second dispatch, no host round-trips, and commits copy
+            # b ints instead of materializing [b, vocab] logits
+            logits, pages = M.decode_step_paged(
+                cfg, params, pages, pt, lengths, tokens, active,
+                use_kernel=self.use_paged_kernel)
+            return (logits, jnp.argmax(logits, -1).astype(jnp.int32),
+                    lengths + active.astype(jnp.int32), pages)
 
         for b in _pow2_buckets(self.max_batch):
             pt = self._dev_in(jnp.full((b, maxp), -1, jnp.int32))
@@ -754,7 +990,7 @@ class PagedJaxExecutor(Executor):
             av = self._dev_in(jnp.zeros((b,), bool))
             self._step_jit[b] = self._lower(
                 step, (self.params, self.pages, pt, ln, tk, av),
-                pages_out=True)
+                pages_out=True, extra_repl=2)
 
     # -- chunked prefill (DESIGN.md §5): one compiled step per chunk-size
     # bucket; pages for each chunk are allocated incrementally as the chunk
@@ -802,10 +1038,12 @@ class PagedJaxExecutor(Executor):
     def _set_first_token(self, tid: int, tok: int) -> None:
         """Record a completed prefill's first output token — and, with spec
         decoding on, start the committed-generation history the draft
-        model's catch-up replays."""
-        self.last_tok[tid] = tok
-        if self.draft is not None:
-            self._gen[tid] = [tok]
+        model's catch-up replays. The history is kept for EVERY paged
+        engine (not just spec ones): it is how the async equivalence
+        drivers reconstruct full token streams without forcing a commit
+        per step (tests/helpers.py drive_async)."""
+        self._last_tok[tid] = tok
+        self._gen[tid] = [tok]
 
     def _committed_tokens(self, task: Task) -> np.ndarray:
         """Token ids at the committed cached positions 0..pool.length-1:
@@ -822,9 +1060,11 @@ class PagedJaxExecutor(Executor):
             [prompt, np.asarray(gen, dtype=prompt.dtype)])[:L]
 
     def generated_tokens(self, task: Task) -> List[int]:
-        """Committed generated token ids so far (spec_decode engines only)
-        — the greedy-equivalence contract surface tested in
-        tests/test_spec_decode.py."""
+        """Committed generated token ids so far — the greedy-equivalence
+        contract surface (tests/test_spec_decode.py) and the stream the
+        async drivers reconstruct from (tests/helpers.py drive_async).
+        Reading it forces pending pipeline commits."""
+        self._commit_pending()
         return list(self._gen.get(task.task_id, []))
 
     # -- prefix sharing (DESIGN.md §6) --
@@ -964,8 +1204,13 @@ class PagedJaxExecutor(Executor):
             if done:
                 self._chunk_progress[tid] = done
         n = min(n_tokens, L - done)
+        async_on = self._async_on()
+        fresh = not self.pool.holds(tid)
+        pre_len = 0 if fresh else self.pool.length(tid)
+        pre_progress = done
         ms = 0.0
         logits = None
+        t_all = time.perf_counter()
         for c in _chunk_pieces(n, self.prefill_chunk_size):
             # incremental allocation: an OutOfPages here propagates with the
             # pool and progress consistent (progress is advanced per PIECE,
@@ -984,8 +1229,9 @@ class PagedJaxExecutor(Executor):
             logits, self.pages = self._chunk_jit[c](
                 self.params, self.pages, self._dev_in(pt),
                 self._dev_in(jnp.asarray([done], jnp.int32)), piece)
-            logits.block_until_ready()
-            ms += (time.perf_counter() - t0) * 1000.0
+            if not async_on:
+                logits.block_until_ready()
+                ms += (time.perf_counter() - t0) * 1000.0
             done += c
             self._chunk_progress[tid] = done
             self._insert_prefix(task, toks_full, upto=done)
@@ -994,9 +1240,27 @@ class PagedJaxExecutor(Executor):
                 # block is capped at L-1, so at least one token always
                 # remains to compute — logits cannot be None here
                 raise RuntimeError(f"task {tid}: empty final chunk")
-            self.last_prefill_logits = np.asarray(logits)
-            self._set_first_token(tid, int(jnp.argmax(logits[0])))
+            if async_on:
+                entry = (self._argmax_jit(logits), 0)
+                self._tok_dev[tid] = entry
+                waited = self._push(PendingStep(
+                    "prefill", [tid],
+                    {"tid": tid, "logits": logits, "tok_dev": {tid: entry},
+                     "fresh": fresh, "pre_len": pre_len,
+                     "pre_progress": pre_progress}))
+                ms = max(0.0, (time.perf_counter() - t_all) * 1000.0 - waited)
+                self.gap_stats.dispatch_ms += ms
+            else:
+                self._last_prefill_logits_src = None
+                self._last_prefill_logits = np.asarray(logits)
+                self._set_first_token(tid, int(jnp.argmax(logits[0])))
+                self.gap_stats.wait_ms += ms
             return ms, True
+        if async_on:
+            ms = (time.perf_counter() - t_all) * 1000.0
+            self.gap_stats.dispatch_ms += ms
+        else:
+            self.gap_stats.wait_ms += ms
         return ms, False
 
     def page_budget(self) -> PageBudget:
@@ -1069,11 +1333,19 @@ class PagedJaxExecutor(Executor):
             self._prefill_jit[key] = self._lower(
                 lambda p, t: M.prefill(self.cfg, p, t, buf_len=self.max_seq),
                 (self.params, toks))
+        async_on = self._async_on()
         t0 = time.perf_counter()
         last, cache1 = self._prefill_jit[key](self.params, toks)
-        last.block_until_ready()
-        ms = (time.perf_counter() - t0) * 1000.0
+        disp = time.perf_counter() - t0
+        if not async_on:
+            last.block_until_ready()
+            ms = (time.perf_counter() - t0) * 1000.0
         # scatter the contiguous single-row cache into the allocated pages
+        # (pure lazy jnp updates — legal to chain un-synced in async mode).
+        # The splice's host dispatch time is booked in NEITHER mode's gap:
+        # the sync path has always measured compute only, and the async
+        # dispatch window must span the same ops or the modes' host-gap
+        # numbers stop being comparable.
         n_alloc, psz = len(phys), self.page_size
         span = n_alloc * psz
         idx = jnp.asarray(phys, jnp.int32)
@@ -1084,8 +1356,22 @@ class PagedJaxExecutor(Executor):
                     .swapaxes(1, 2))
             self.pages[name] = self.pages[name].at[:, idx].set(view)
         self._canonicalize_pages()
-        self.last_prefill_logits = np.asarray(last)
-        self._set_first_token(tid, int(jnp.argmax(last[0])))
+        if async_on:
+            t1 = time.perf_counter()
+            entry = (self._argmax_jit(last), 0)
+            self._tok_dev[tid] = entry
+            waited = self._push(PendingStep(
+                "prefill", [tid],
+                {"tid": tid, "logits": last, "tok_dev": {tid: entry},
+                 "fresh": True}))
+            disp += time.perf_counter() - t1
+            ms = max(0.0, disp * 1000.0 - waited)
+            self.gap_stats.dispatch_ms += ms
+        else:
+            self._last_prefill_logits_src = None
+            self._last_prefill_logits = np.asarray(last)
+            self._set_first_token(tid, int(jnp.argmax(last[0])))
+            self.gap_stats.wait_ms += ms
         self._insert_prefix(task, toks_np)
         return ms
 
@@ -1134,9 +1420,11 @@ class PagedJaxExecutor(Executor):
                 pieces.append(b)
                 n -= b
             b >>= 1
+        async_on = self._async_on()
         done = start
         ms = 0.0
         logits = None
+        t_all = time.perf_counter()
         for c in pieces:
             fn = self._suffix_step(c)
             piece = self._dev_in(jnp.asarray(toks_np[:, done:done + c],
@@ -1145,11 +1433,24 @@ class PagedJaxExecutor(Executor):
             logits, self.pages = fn(
                 self.params, self.pages, pt,
                 self._dev_in(jnp.asarray([done], jnp.int32)), piece)
-            logits.block_until_ready()
-            ms += (time.perf_counter() - t0) * 1000.0
+            if not async_on:
+                logits.block_until_ready()
+                ms += (time.perf_counter() - t0) * 1000.0
             done += c
-        self.last_prefill_logits = np.asarray(logits)
-        self._set_first_token(tid, int(jnp.argmax(logits[0])))
+        if async_on:
+            entry = (self._argmax_jit(logits), 0)
+            self._tok_dev[tid] = entry
+            waited = self._push(PendingStep(
+                "prefill", [tid],
+                {"tid": tid, "logits": logits, "tok_dev": {tid: entry},
+                 "fresh": True}))
+            ms = max(0.0, (time.perf_counter() - t_all) * 1000.0 - waited)
+            self.gap_stats.dispatch_ms += ms
+        else:
+            self._last_prefill_logits_src = None
+            self._last_prefill_logits = np.asarray(logits)
+            self._set_first_token(tid, int(jnp.argmax(logits[0])))
+            self.gap_stats.wait_ms += ms
         return ms
 
     def decode(self, tasks: Sequence[Task],
@@ -1163,6 +1464,7 @@ class PagedJaxExecutor(Executor):
                 raise RuntimeError("executor built without spec_decode=True")
             return self._decode_spec(tasks, [int(d) for d in depths])
         ids = [t.task_id for t in tasks]
+        t_disp = time.perf_counter()
         lengths = [self.pool.length(i) for i in ids]
         for i, ln in zip(ids, lengths):
             if ln + 1 > self.max_seq:
@@ -1181,25 +1483,69 @@ class PagedJaxExecutor(Executor):
             pt[r, : len(row)] = row
         ln = np.zeros((b,), np.int32)
         ln[: len(ids)] = lengths
-        tk = np.zeros((b,), np.int32)
-        tk[: len(ids)] = [self.last_tok[i] for i in ids]
         av = np.zeros((b,), bool)
         av[: len(ids)] = True
+        if self._async_on():
+            # dispatch-ahead: the input token vector chains on-device off
+            # the in-flight argmax — no host round-trip — and the step's
+            # observation rides the queue until commit time. Plain decode
+            # always commits exactly one token per task (control flow is
+            # length-based), so host accounting can proceed optimistically
+            # at dispatch.
+            tk_dev = self._chain_vector(ids, b)
+            if tk_dev is None:
+                if any(i in self._tok_dev for i in ids):
+                    tk_dev = jnp.stack(
+                        [self._chain_tok(i) for i in ids]
+                        + [np.int32(0)] * (b - len(ids)))
+                else:            # fully committed: plain host vector
+                    tk_np = np.zeros((b,), np.int32)
+                    tk_np[: len(ids)] = [self._last_tok[i] for i in ids]
+                    tk_dev = tk_np
+            key = (tuple(ids), b)
+            logits, am, ln_next, self.pages = self._step_jit[b](
+                self.params, self.pages,
+                self._cached_in("pt", key, pt),
+                self._cached_in("ln", key, ln),
+                self._dev_in(tk_dev),
+                self._cached_in("av", key, av))
+            # chain next cycle's lengths off the fused output: every
+            # active row grew by exactly one token, which is also what
+            # pool.length will report when the next decode builds ln
+            self._in_cache["ln"] = (key, (ln + av).astype(np.int32), ln_next)
+            tok_dev = {}
+            for r, i in enumerate(ids):
+                tok_dev[i] = self._tok_dev[i] = (am, r)
+            self._last_am = (tuple(ids), b, am)
+            waited = self._push(PendingStep(
+                "decode", ids,
+                {"logits": logits, "argmax": am, "tok_dev": tok_dev,
+                 "pre_lengths": dict(zip(ids, lengths))}))
+            ms = max(0.0, (time.perf_counter() - t_disp) * 1000.0 - waited)
+            self.gap_stats.dispatch_ms += ms
+            return ms
+        tk = np.zeros((b,), np.int32)
+        tk[: len(ids)] = [self._last_tok[i] for i in ids]
         t0 = time.perf_counter()
-        logits, self.pages = self._step_jit[b](
+        logits, am, _, self.pages = self._step_jit[b](
             self.params, self.pages, self._dev_in(pt), self._dev_in(ln),
             self._dev_in(tk), self._dev_in(av))
-        logits.block_until_ready()
+        am.block_until_ready()
         ms = (time.perf_counter() - t0) * 1000.0
-        self.last_logits = np.asarray(logits)[: len(ids)]
-        new_toks = np.argmax(self.last_logits, -1)
+        # logits stay device-resident until someone reads last_logits —
+        # the sync path shares the async commit's lazy materialization
+        self._last_logits = None
+        self._last_logits_src = (logits, len(ids))
+        new_toks = np.asarray(am)[: len(ids)]
         for i, tok in zip(ids, new_toks):
-            self.last_tok[i] = int(tok)
-            if self.draft is not None:
-                # setdefault: latency-model probes decode without a real
-                # prefill, so they have no first-token history entry
-                self._gen.setdefault(i, []).append(int(tok))
-        self.last_commits = [1] * len(ids)
+            self._last_tok[i] = int(tok)
+            self._tok_dev.pop(i, None)
+            # setdefault: latency-model probes decode without a real
+            # prefill, so they have no first-token history entry
+            self._gen.setdefault(i, []).append(int(tok))
+        self._last_commits = [1] * len(ids)
+        self.gap_stats.wait_ms += ms
+        self.gap_stats.cycles += 1
         return ms
 
     # -- speculative decoding (DESIGN.md §8) --
@@ -1208,9 +1554,18 @@ class PagedJaxExecutor(Executor):
         """Draft–verify iteration: per-task windows drafted by the tiny
         model, verified in ONE bucketed ``verify_step_paged`` call, the
         accepted prefix committed and rejected-draft pages rolled back.
-        Greedy-equivalent to depth-0 decode by the acceptance rule."""
-        from repro.serving.spec_decode import depth_bucket, greedy_accept
+        Greedy-equivalent to depth-0 decode by the acceptance rule.
+
+        Async pipelining (DESIGN.md §10): greedy acceptance is data-
+        dependent, so drafting the NEXT window needs this window's
+        committed history — spec decode is a pipeline commit barrier. The
+        realized overlap is the verify flight running while the host
+        drafts/replans and swap transfers land; the acceptance/rollback
+        work still rides the queue until the loop reads ``last_commits``."""
+        from repro.serving.spec_decode import depth_bucket
         jnp = self.jnp
+        self._commit_pending()        # drafts replay committed history
+        async_on = self._async_on()
         ids = [t.task_id for t in tasks]
         lengths = [self.pool.length(i) for i in ids]
         t0 = time.perf_counter()
@@ -1231,7 +1586,7 @@ class PagedJaxExecutor(Executor):
         for r, (t, d) in enumerate(zip(tasks, capped)):
             if d > 0:
                 d_items.append((t.task_id, self._committed_tokens(t),
-                                self.last_tok[t.task_id]))
+                                self._last_tok[t.task_id]))
                 d_depths.append(d)
                 d_rows.append(r)
         if d_items:
@@ -1261,16 +1616,44 @@ class PagedJaxExecutor(Executor):
         ln_arr[: len(ids)] = lengths
         toks = np.zeros((b, K + 1), np.int32)
         for r, i in enumerate(ids):
-            toks[r, 0] = self.last_tok[i]
+            toks[r, 0] = self._last_tok[i]
             toks[r, 1: 1 + len(drafts[r])] = drafts[r]
         logits, self.pages = self._verify_jit[(b, K)](
             self.params, self.pages, self._dev_in(pt), self._dev_in(ln_arr),
             self._dev_in(toks))
+        if async_on:
+            waited = self._push(PendingStep(
+                "verify", ids,
+                {"logits": logits, "tasks": list(tasks), "lengths": lengths,
+                 "capped": capped, "drafts": drafts, "tok_dev": {},
+                 "pre_lengths": dict(zip(ids, lengths))}))
+            ms = max(0.0, (time.perf_counter() - t0) * 1000.0 - waited)
+            self.gap_stats.dispatch_ms += ms
+            return ms
         logits.block_until_ready()
-        logits_np = np.asarray(logits)[: len(ids)]      # [n, K+1, V]
+        self._apply_verify(tasks, lengths, capped, drafts,
+                           np.asarray(logits)[: len(ids)])
+        ms = (time.perf_counter() - t0) * 1000.0
+        self.gap_stats.wait_ms += ms
+        self.gap_stats.cycles += 1
+        return ms
+
+    def _commit_verify(self, step: PendingStep) -> None:
+        p = step.payload
+        self._apply_verify(p["tasks"], p["lengths"], p["capped"],
+                           p["drafts"],
+                           np.asarray(p["logits"])[: len(step.task_ids)])
+
+    def _apply_verify(self, tasks, lengths, capped, drafts,
+                      logits_np) -> None:
+        """Host side of a verify window: greedy acceptance, page rollback,
+        committed-history updates. Shared verbatim by the sync path and
+        the async commit so both modes produce identical streams."""
+        from repro.serving.spec_decode import greedy_accept
         commits: List[int] = []
         last_rows = []
-        for r, (t, i, ln) in enumerate(zip(tasks, ids, lengths)):
+        for r, (t, ln) in enumerate(zip(tasks, lengths)):
+            i = t.task_id
             d = capped[r]
             target_ids = np.argmax(logits_np[r, : d + 1], -1)
             n_acc = greedy_accept(drafts[r][:d], target_ids)
@@ -1278,16 +1661,17 @@ class PagedJaxExecutor(Executor):
             new_len = ln + n_acc + 1
             if new_len < ln + d + 1:     # roll back rejected-draft pages
                 self.pool.truncate(i, new_len)
-            self.last_tok[i] = bonus
+            self._last_tok[i] = bonus
+            self._tok_dev.pop(i, None)
             self._gen[i].extend(drafts[r][:n_acc] + [bonus])
             self.draft.note_commit(i, new_len)
-            self.accepted_tokens += n_acc
+            self._accepted_tokens += n_acc
             commits.append(n_acc + 1)
             last_rows.append(logits_np[r, n_acc])
         self.spec_steps += 1
-        self.last_logits = np.stack(last_rows)
-        self.last_commits = commits
-        return (time.perf_counter() - t0) * 1000.0
+        self._last_logits_src = None
+        self._last_logits = np.stack(last_rows)
+        self._last_commits = commits
 
     @property
     def drafted_tokens(self) -> int:
@@ -1334,30 +1718,78 @@ class PagedJaxExecutor(Executor):
         resident."""
         jax, jnp = self.jax, self.jnp
         tid = task.task_id
+        # ordering contract (DESIGN.md §10): a suspend issued while steps
+        # are in flight lands AFTER their commit — the swapped contents
+        # must include every committed token's KV
+        self._commit_pending()
+        async_on = self._async_on()
         t0 = time.perf_counter()
         released = self.pool.swap_out(tid)
         entries = []
         if released:
-            # copy IMMEDIATELY after swap_out: the pages are back on the
-            # free list, but nothing re-allocates them before this gather
+            # snapshot IMMEDIATELY after swap_out: the pages are back on
+            # the free list, but jax arrays are functional — these slices
+            # capture the arena version of this instant, so later reuse of
+            # the physical pages can never corrupt the blobs, even while
+            # the async gather is still in flight
             idx = jnp.asarray([p for _, p in released], jnp.int32)
-            k_host = jax.device_get(self.pages["k_pages"][:, idx])
-            v_host = jax.device_get(self.pages["v_pages"][:, idx])
-            entries = [(li, {"k": k_host[:, i], "v": v_host[:, i]})
-                       for i, (li, _) in enumerate(released)]
+            k_slab = self.pages["k_pages"][:, idx]
+            v_slab = self.pages["v_pages"][:, idx]
+            if async_on:
+                # lazy per-page blobs: .nbytes is shape-derived, so the
+                # arena's capacity check stays synchronous; the actual
+                # device->host copy runs on the background worker
+                entries = [(li, {"k": k_slab[:, i], "v": v_slab[:, i]})
+                           for i, (li, _) in enumerate(released)]
+            else:
+                k_host = jax.device_get(k_slab)
+                v_host = jax.device_get(v_slab)
+                entries = [(li, {"k": k_host[:, i], "v": v_host[:, i]})
+                           for i, (li, _) in enumerate(released)]
         try:
             self.arena.put(tid, entries)
         except HostArenaFull:
-            # the released pages are still free (single-threaded, nothing
-            # allocated since), so swap_in cannot fail here
+            # the released pages are still free (nothing allocated since),
+            # so swap_in cannot fail here; np.stack on the lazy blobs
+            # simply forces the transfer inline
             self._restore_pages(self.pool.swap_in(tid), entries)
             raise
+        if async_on and entries:
+            handle = self.ledger.begin(tid, [p for _, p in released])
+            self._transfer_worker().submit(
+                self._materialize_entries, handle, entries)
         if self.draft is not None:
             # a suspended task's draft state is simply dropped (DESIGN.md
             # §8): its committed history survives in _gen, so the first
             # propose after resume re-prefills the draft cache
             self.draft.drop(tid)
-        return (time.perf_counter() - t0) * 1000.0
+        ms = (time.perf_counter() - t0) * 1000.0
+        if async_on:
+            self.gap_stats.dispatch_ms += ms
+        else:
+            self.gap_stats.wait_ms += ms
+        return ms
+
+    def _transfer_worker(self):
+        if self._swap_pool is None:
+            from concurrent.futures import ThreadPoolExecutor
+            self._swap_pool = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="kv-swap")
+        return self._swap_pool
+
+    def _materialize_entries(self, handle: int, entries) -> None:
+        """Background half of an async suspend: pull each lazy page blob
+        to host memory in place, then retire the ledger entry. Runs on
+        the single transfer worker, overlapped with device compute."""
+        t0 = time.perf_counter()
+        try:
+            for _, blob in entries:
+                blob["k"] = np.asarray(blob["k"])
+                blob["v"] = np.asarray(blob["v"])
+        finally:
+            self.gap_stats.add_swap_overlap(
+                (time.perf_counter() - t0) * 1000.0)
+            self.ledger.complete(handle)
 
     def resume(self, task: Task) -> float:
         """Re-allocate device pages for the swapped-out positions (evicting
@@ -1365,23 +1797,43 @@ class PagedJaxExecutor(Executor):
         restore the host contents. OutOfPages propagates with pool and
         arena unchanged — the task simply stays suspended."""
         tid = task.task_id
+        # the blobs may still be materializing on the transfer worker —
+        # the ledger is what makes "no page read before its transfer
+        # landed" a waited-on invariant rather than a hope
+        self.ledger.wait(tid)
+        async_on = self._async_on()
         t0 = time.perf_counter()
         restored = self._reserve(lambda: self.pool.swap_in(tid))
         self._restore_pages(restored, self.arena.take(tid))
-        return (time.perf_counter() - t0) * 1000.0
+        ms = (time.perf_counter() - t0) * 1000.0
+        if async_on:
+            self.gap_stats.dispatch_ms += ms
+        else:
+            self.gap_stats.wait_ms += ms
+        return ms
 
     def release(self, task: Task) -> None:
-        self.pool.free(task.task_id)
-        self.arena.drop(task.task_id)
-        self.last_tok.pop(task.task_id, None)
-        self._chunk_progress.pop(task.task_id, None)
-        self._toks_memo.pop(task.task_id, None)
-        self._gen.pop(task.task_id, None)
+        tid = task.task_id
+        # a finished task can still have steps in flight (the loop learns
+        # "finished" from host-side token counts, not device results):
+        # commit through them so their observation lands before teardown
+        while self._queue.pending_for(tid):
+            self._queue.commit_oldest()
+        self.ledger.wait(tid)
+        self.pool.free(tid)
+        self.arena.drop(tid)
+        self._last_tok.pop(tid, None)
+        self._tok_dev.pop(tid, None)
+        self._chunk_progress.pop(tid, None)
+        self._toks_memo.pop(tid, None)
+        self._gen.pop(tid, None)
         if self.draft is not None:
-            self.draft.drop(task.task_id)
+            self.draft.drop(tid)
 
     def latency_model(self) -> LatencyModel:
-        """Measure l(b) on the live engine (warm jit) — MeasuredLatencyModel."""
+        """Measure l(b) on the live engine (warm jit) — MeasuredLatencyModel.
+        Probes run under _sync_mode(): dispatch-only timings would look
+        like a ~0ms decode and poison every Eq. 7 feasibility estimate."""
         from repro.core.task import qa_task
         # each warm task may grow ~32 tokens across the probe decodes;
         # reserve that many pages so probing never exhausts the pool
@@ -1389,10 +1841,11 @@ class PagedJaxExecutor(Executor):
                    max(1, self.n_pages // max(1, self.pool.pages_for(32))))
         probes = sorted({b for b in (1, 2, 4, 8, nmax) if b <= nmax})
         warm = [qa_task() for _ in range(nmax)]
-        for t in warm:
-            self.pool.alloc(t.task_id, 1)
-            self.last_tok[t.task_id] = 0
-        lat = _probe_latency_curve(self, warm, probes)
-        for t in warm:
-            self.release(t)
+        with self._sync_mode():
+            for t in warm:
+                self.pool.alloc(t.task_id, 1)
+                self._last_tok[t.task_id] = 0
+            lat = _probe_latency_curve(self, warm, probes)
+            for t in warm:
+                self.release(t)
         return lat

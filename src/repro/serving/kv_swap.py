@@ -23,6 +23,16 @@ Pure host-side bookkeeping + numpy storage — no jax. An optional
 ``capacity_bytes`` models the edge device's limited host RAM: ``put``
 beyond it raises ``HostArenaFull`` with the arena unchanged, and the
 caller (executor) surfaces that as a failed suspension.
+
+Async pipelining (DESIGN.md §10): under ``async_dispatch`` the executor
+puts *lazy* page blobs — functional jax snapshots whose device->host copy
+runs later on a background transfer worker, tracked by a TransferLedger.
+That works unchanged here because the capacity check only needs
+``.nbytes`` (shape-derived, available before the copy lands) and the
+worker materializes each blob IN PLACE (``blob["k"] = np.asarray(...)``),
+so ``check()``'s byte audit holds before, during, and after the
+transfer. ``take``/``drop`` callers must wait out the owner's ledger
+entry first — the executor's resume/release do.
 """
 from __future__ import annotations
 

@@ -19,10 +19,20 @@ the scheduler's per-cycle credit learns about the extras through
 ``note_decoded``, and LoopResult reports the extra/drafted/accepted
 token counts. With ``depths=None`` the classic one-token path runs
 byte-identically.
+
+Async pipelining (DESIGN.md §10): an executor exposing ``gap_stats`` gets
+its host/device gap breakdown (schedule/dispatch/wait/swap-overlap ms)
+measured per run and surfaced in LoopResult. Under ``async_dispatch`` the
+executor returns dispatch-only times, so the loop folds each commit's
+blocked time into ``now`` as it lands (exactly once — tracked by a
+wait-ms watermark) and drains the pipeline before reporting, keeping
+end_ms meaningful while the policy-visible event ORDER stays identical
+to the sync engine's.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import List, Optional, Sequence
 
 from repro.core.schedulers import (DecodeAction, PrefillAction,
@@ -54,6 +64,16 @@ class LoopResult:
     spec_extra_tokens: int = 0
     drafted_tokens: int = 0
     accepted_tokens: int = 0
+    # host/device gap breakdown (DESIGN.md §10): host replanning, host
+    # dispatch work, host blocked on device results, and transfer time
+    # overlapped on the background swap worker — deltas over this run,
+    # from the executor's GapStats (all 0.0 for executors without one).
+    # Timing floats: excluded from the sync/async equivalence contract.
+    schedule_ms: float = 0.0
+    dispatch_ms: float = 0.0
+    wait_ms: float = 0.0
+    swap_overlap_ms: float = 0.0
+    pipeline_stalls: int = 0
 
 
 def run_serving_loop(scheduler: Scheduler, executor: Executor,
@@ -67,6 +87,23 @@ def run_serving_loop(scheduler: Scheduler, executor: Executor,
     n_spec_extra = 0
     gas = idle_gas
     tracked: List[Task] = []   # delivered, neither finished nor dropped yet
+    # host/device gap accounting (DESIGN.md §10): report per-RUN deltas of
+    # the executor's GapStats; under async dispatch, fold commit waits into
+    # `now` exactly once via the wait-ms watermark (executor ops return
+    # dispatch-only times there).
+    stats = getattr(executor, "gap_stats", None)
+    async_mode = bool(getattr(executor, "async_dispatch", False))
+    base = stats.as_dict() if stats is not None else None
+    wait_seen = base["wait_ms"] if base is not None else 0.0
+
+    def fold_wait() -> None:
+        nonlocal now, wait_seen
+        if stats is None or not async_mode:
+            return
+        d = stats.wait_ms - wait_seen
+        if d > 0:
+            now += d
+        wait_seen = stats.wait_ms
 
     def deliver_arrivals(upto: float) -> None:
         nonlocal i
@@ -92,7 +129,10 @@ def run_serving_loop(scheduler: Scheduler, executor: Executor,
         gas -= 1
         if gas <= 0:
             raise RuntimeError("serving loop did not converge")
+        t_sched = time.perf_counter()
         action = scheduler.next_action(now)   # may drop tasks (reschedule)
+        if stats is not None:
+            stats.schedule_ms += (time.perf_counter() - t_sched) * 1000.0
         release_dropped()
         if action is None:
             if i < len(arrivals):            # idle -> jump to next arrival
@@ -201,7 +241,19 @@ def run_serving_loop(scheduler: Scheduler, executor: Executor,
                     if t.finished:
                         scheduler.on_finish(t, now)
                         executor.release(t)
+        fold_wait()
         deliver_arrivals(now)
+    drain = getattr(executor, "drain", None)
+    if drain is not None:      # commit in-flight steps + background swaps
+        drain()
+        fold_wait()
+    gaps = {}
+    stalls = 0
+    if stats is not None:
+        end = stats.as_dict()
+        gaps = {k: end[k] - base[k] for k in
+                ("schedule_ms", "dispatch_ms", "wait_ms", "swap_overlap_ms")}
+        stalls = int(end["stalls"] - base["stalls"])
     return LoopResult(tasks=list(arrivals), end_ms=now,
                       decode_iterations=n_decode, prefills=n_prefill,
                       prefill_chunks=n_chunks,
@@ -212,4 +264,9 @@ def run_serving_loop(scheduler: Scheduler, executor: Executor,
                       drafted_tokens=int(getattr(executor, "drafted_tokens",
                                                  0)),
                       accepted_tokens=int(getattr(executor,
-                                                  "accepted_tokens", 0)))
+                                                  "accepted_tokens", 0)),
+                      schedule_ms=gaps.get("schedule_ms", 0.0),
+                      dispatch_ms=gaps.get("dispatch_ms", 0.0),
+                      wait_ms=gaps.get("wait_ms", 0.0),
+                      swap_overlap_ms=gaps.get("swap_overlap_ms", 0.0),
+                      pipeline_stalls=stalls)

@@ -8,10 +8,18 @@ harness (test_sharded.py) states compositions, not plumbing.
 
 Not a pytest plugin: plain importable module (tests/ is on sys.path via
 rootdir insertion, so ``from helpers import ...`` works without a package).
+
+Async pipelining (DESIGN.md §10): ``make_paged_engine`` defaults
+``async_dispatch`` from the ``REPRO_ASYNC_PIPELINE`` env var, so CI's
+async matrix leg runs the ENTIRE paged-engine suite through the
+dispatch-ahead pipeline — every observation property commits pending
+steps, so the assertions are mode-transparent and byte-identity is
+enforced suite-wide, not just in test_async_engine.py.
 """
 from __future__ import annotations
 
 import dataclasses
+import os
 
 import numpy as np
 
@@ -51,8 +59,12 @@ def make_paged_engine(cfg, *, params=None, n_pages: int = 16,
                       page_size: int = 8, max_seq: int = 64,
                       max_batch: int = 4, seed: int = 0, **kw):
     """Paged candidate engine (PagedJaxExecutor) with suite-standard
-    sizing; pass mesh=... for the tensor-parallel sharded mode."""
+    sizing; pass mesh=... for the tensor-parallel sharded mode. Unless a
+    test pins async_dispatch explicitly, the mode follows the
+    REPRO_ASYNC_PIPELINE env var (CI's async matrix dimension)."""
     from repro.serving.executor import PagedJaxExecutor
+    kw.setdefault("async_dispatch",
+                  os.environ.get("REPRO_ASYNC_PIPELINE", "") == "1")
     return PagedJaxExecutor(cfg, params=params, n_pages=n_pages,
                             page_size=page_size, max_seq=max_seq,
                             max_batch=max_batch, seed=seed, **kw)
@@ -60,10 +72,29 @@ def make_paged_engine(cfg, *, params=None, n_pages: int = 16,
 
 def drive_plain(ex, tasks, n_steps: int):
     """Plain (depth-0) greedy decode loop; returns per-task token streams
-    starting from the prefill's first token."""
+    starting from the prefill's first token. Reads ``last_tok`` every
+    step, so an async engine commits per cycle — correct but unpipelined;
+    use drive_async to keep the dispatch queue full."""
     streams = {t.task_id: [ex.last_tok[t.task_id]] for t in tasks}
     for _ in range(n_steps):
         ex.decode(tasks)
         for t in tasks:
             streams[t.task_id].append(ex.last_tok[t.task_id])
     return streams
+
+
+def drive_async(ex, tasks, n_steps: int):
+    """Pipelined greedy decode loop for paged engines: dispatch every step
+    without touching an observation surface, drain once, and reconstruct
+    the full streams from the committed generation histories. On a sync
+    engine every op commits inline, so the two modes return identical
+    streams for identical engines — the equivalence harness relies on
+    exactly that. Same return shape as drive_plain."""
+    start = {t.task_id: ex.last_tok[t.task_id] for t in tasks}
+    base = {t.task_id: len(ex.generated_tokens(t)) for t in tasks}
+    for _ in range(n_steps):
+        ex.decode(tasks)
+    if hasattr(ex, "drain"):
+        ex.drain()
+    return {t.task_id: [start[t.task_id]]
+            + ex.generated_tokens(t)[base[t.task_id]:] for t in tasks}

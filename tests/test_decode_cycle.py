@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config
+from helpers import reduced_cfg
 from repro.core.decode_cycle import cycle_throughput_estimate, decode_cycle
 from repro.core.latency_model import paper_fig1_model
 from repro.core.mask_matrix import build_mask_matrix, estimate_period_ms
@@ -13,7 +13,7 @@ KEY = jax.random.PRNGKey(0)
 
 
 def _setup(B=4, S=8):
-    cfg = get_config("smollm-360m").reduced()
+    cfg = reduced_cfg()
     p = M.init_params(cfg, KEY)
     toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
     last, cache = M.prefill(cfg, p, toks, buf_len=64)

@@ -1,0 +1,247 @@
+"""Deterministic unit tests for the async-pipeline state machine
+(DESIGN.md §10): DispatchQueue depth bounds / stall accounting /
+drain-on-error rollback, the TransferLedger lifecycle discipline, and
+GapStats bookkeeping — all on a FakeClock, so no assertion ever depends
+on wall-clock time."""
+import threading
+
+import pytest
+
+from repro.serving.pipeline import (DispatchQueue, FakeClock, GapStats,
+                                    PendingStep, TransferLedger)
+
+
+def _mk(max_in_flight=2, commit_cost_ms=0.0, fail_on=None):
+    """Queue + fake clock + logs. ``commit_cost_ms`` advances the clock
+    inside each commit (modelling host blocked on device results);
+    ``fail_on`` makes committing that step kind raise."""
+    clock = FakeClock()
+    stats = GapStats()
+    committed, rolled_back = [], []
+
+    def commit(step):
+        clock.advance(commit_cost_ms)
+        if fail_on is not None and step.kind == fail_on:
+            raise RuntimeError(f"poisoned {step.kind}")
+        committed.append(step)
+
+    q = DispatchQueue(commit, max_in_flight=max_in_flight,
+                      rollback=rolled_back.append, stats=stats, clock=clock)
+    return q, clock, stats, committed, rolled_back
+
+
+# ---- FakeClock ----
+
+def test_fake_clock_is_deterministic():
+    clock = FakeClock(5.0)
+    assert clock() == 5.0
+    clock.advance(2.5)
+    assert clock() == 7.5
+    with pytest.raises(ValueError):
+        clock.advance(-1.0)
+
+
+# ---- DispatchQueue: depth bound + stall accounting ----
+
+def test_queue_depth_never_exceeds_bound():
+    q, _, stats, committed, _ = _mk(max_in_flight=2)
+    for n in range(6):
+        q.push(PendingStep("decode", [n]))
+        assert q.depth <= 2
+    # pushes 3..6 each found the queue full: committed the oldest first
+    assert stats.stalls == 4
+    assert stats.cycles == 6
+    assert [s.task_ids for s in committed] == [[0], [1], [2], [3]]
+    assert q.commit_all() == 2
+    assert [s.task_ids for s in committed] == [[n] for n in range(6)]
+    assert len(q) == 0
+
+
+def test_queue_requires_positive_bound():
+    with pytest.raises(ValueError):
+        DispatchQueue(lambda s: None, max_in_flight=0)
+
+
+def test_unbounded_depth_one_commits_every_push():
+    q, _, stats, committed, _ = _mk(max_in_flight=1)
+    q.push(PendingStep("decode", [0]))
+    q.push(PendingStep("decode", [1]))
+    assert stats.stalls == 1           # second push evicted the first
+    assert [s.task_ids for s in committed] == [[0]]
+
+
+def test_commit_time_books_wait_ms_on_fake_clock():
+    q, clock, stats, _, _ = _mk(max_in_flight=4, commit_cost_ms=3.0)
+    for n in range(3):
+        q.push(PendingStep("decode", [n]))
+    assert stats.wait_ms == 0.0        # nothing observed yet
+    q.commit_all()
+    assert stats.wait_ms == pytest.approx(9.0)
+    assert clock() == pytest.approx(9.0)
+
+
+def test_dispatched_at_is_stamped_from_clock():
+    q, clock, _, _, _ = _mk(max_in_flight=4)
+    clock.advance(11.0)
+    step = PendingStep("decode", [0])
+    q.push(step)
+    assert step.dispatched_at_ms == 11.0
+
+
+def test_commit_order_is_fifo():
+    q, _, _, committed, _ = _mk(max_in_flight=8)
+    for n in range(5):
+        q.push(PendingStep("decode", [n]))
+    q.commit_all()
+    assert [s.task_ids for s in committed] == [[n] for n in range(5)]
+
+
+def test_pending_for_counts_in_flight_steps():
+    q, _, _, _, _ = _mk(max_in_flight=8)
+    q.push(PendingStep("decode", [1, 2]))
+    q.push(PendingStep("decode", [2]))
+    assert q.pending_for(2) == 2
+    assert q.pending_for(1) == 1
+    assert q.pending_for(9) == 0
+    q.commit_oldest()
+    assert q.pending_for(2) == 1
+
+
+# ---- DispatchQueue: drain-on-error rollback ----
+
+def test_poisoned_commit_rolls_back_suffix_newest_first():
+    q, _, _, committed, rolled_back = _mk(max_in_flight=8, fail_on="verify")
+    q.push(PendingStep("decode", [0]))
+    q.push(PendingStep("verify", [1]))
+    q.push(PendingStep("decode", [2]))
+    q.push(PendingStep("decode", [3]))
+    with pytest.raises(RuntimeError, match="poisoned verify"):
+        q.commit_all()
+    # step 0 landed; the poisoned step and everything after it did not,
+    # and the uncommitted suffix was rolled back newest first
+    assert [s.task_ids for s in committed] == [[0]]
+    assert [s.task_ids for s in rolled_back] == [[3], [2]]
+    assert len(q) == 0                 # nothing half-committed left behind
+
+
+def test_poisoned_commit_still_books_wait():
+    q, _, stats, _, _ = _mk(commit_cost_ms=2.0, fail_on="decode")
+    q.push(PendingStep("decode", [0]))
+    with pytest.raises(RuntimeError):
+        q.commit_oldest()
+    assert stats.wait_ms == pytest.approx(2.0)
+
+
+def test_discard_drain_without_rollback_callback():
+    q = DispatchQueue(lambda s: None, max_in_flight=4)
+    q.push(PendingStep("decode", [0]))
+    assert q.drain(discard=True) == 1
+    assert len(q) == 0
+
+
+def test_commit_oldest_on_empty_returns_none():
+    q, _, _, _, _ = _mk()
+    assert q.commit_oldest() is None
+    assert q.commit_all() == 0
+
+
+# ---- GapStats ----
+
+def test_gap_stats_host_gap_and_dict():
+    stats = GapStats()
+    stats.schedule_ms = 1.0
+    stats.dispatch_ms = 2.0
+    stats.wait_ms = 3.0
+    stats.add_swap_overlap(4.0)
+    stats.cycles = 5
+    stats.stalls = 1
+    assert stats.host_gap_ms() == pytest.approx(5.0)
+    d = stats.as_dict()
+    assert d["host_gap_ms"] == pytest.approx(5.0)
+    assert d["swap_overlap_ms"] == pytest.approx(4.0)
+    assert d["cycles"] == 5 and d["stalls"] == 1
+
+
+def test_gap_stats_swap_overlap_is_thread_safe():
+    stats = GapStats()
+    threads = [threading.Thread(
+        target=lambda: [stats.add_swap_overlap(0.001) for _ in range(1000)])
+        for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert stats.swap_overlap_ms == pytest.approx(4.0)
+
+
+# ---- TransferLedger ----
+
+def test_ledger_lifecycle_and_busy_pages():
+    led = TransferLedger()
+    h1 = led.begin(7, [1, 2])
+    h2 = led.begin(8, [3])
+    assert led.outstanding() == 2
+    assert led.outstanding(7) == 1
+    assert led.busy_pages() == frozenset({1, 2, 3})
+    assert led.busy(2) and not led.busy(9)
+    led.check()
+    led.complete(h1)
+    assert led.busy_pages() == frozenset({3})
+    assert led.outstanding(7) == 0
+    led.complete(h2)
+    assert led.outstanding() == 0
+    assert led.started == 2 and led.completed == 2
+    led.check()
+
+
+def test_ledger_rejects_double_completion():
+    led = TransferLedger()
+    h = led.begin(1, [0])
+    led.complete(h)
+    with pytest.raises(ValueError):
+        led.complete(h)
+
+
+def test_ledger_assert_idle_refuses_busy_pages():
+    led = TransferLedger()
+    h = led.begin(1, [4, 5])
+    with pytest.raises(RuntimeError, match="free.*transfer outstanding"):
+        led.assert_idle([5, 6], what="free")
+    led.assert_idle([6, 7])            # disjoint pages are fine
+    led.complete(h)
+    led.assert_idle([4, 5])            # transfer landed: no longer busy
+
+
+def test_ledger_wait_blocks_until_background_completion():
+    led = TransferLedger()
+    h = led.begin(3, [0])
+    timer = threading.Timer(0.02, led.complete, args=(h,))
+    timer.start()
+    led.wait(3, timeout=5.0)           # returns once the worker lands it
+    assert led.outstanding(3) == 0
+
+
+def test_ledger_wait_times_out_on_stuck_transfer():
+    led = TransferLedger()
+    led.begin(3, [0])
+    with pytest.raises(TimeoutError):
+        led.wait(3, timeout=0.01)
+
+
+def test_ledger_wait_on_idle_owner_is_noop():
+    led = TransferLedger()
+    led.wait(99, timeout=0.01)
+    led.wait(timeout=0.01)
+
+
+def test_ledger_multiple_transfers_per_owner():
+    led = TransferLedger()
+    h1 = led.begin(5, [0])
+    h2 = led.begin(5, [1])
+    assert led.outstanding(5) == 2
+    assert led.handles(5) == [h1, h2]
+    led.complete(h2)
+    assert led.outstanding(5) == 1
+    led.check()
+    led.complete(h1)
+    assert led.handles() == []

@@ -263,6 +263,206 @@ def test_radix_pool_interleavings_no_leaks_no_aliasing(data):
 
 @given(st.data())
 @settings(max_examples=60, deadline=None)
+def test_async_swap_interleavings_respect_transfer_ledger(data):
+    """DESIGN.md §10 stage 3 safety: random interleavings of pool ops with
+    ASYNC swap transfers — a swap_out begins a TransferLedger entry whose
+    host copy lands later (a model 'worker' completes it) — never free,
+    CoW-fork, or write a physical page while its transfer is outstanding.
+    The model follows the executor's discipline: any op about to touch a
+    busy page (or an owner with an in-flight transfer — resume/release)
+    first waits the transfer out, then passes ``assert_idle``; a per-step
+    audit proves no busy page's contents ever changed between begin and
+    completion, and ``ledger.check``/``pool.check`` hold after every op
+    and after the forced end-of-run drain."""
+    from repro.serving.kv_pool import KVPagePool, OutOfPages
+    from repro.serving.pipeline import TransferLedger
+
+    PSZ = 2
+    pool = KVPagePool(n_pages=16, page_size=PSZ)
+    ledger = TransferLedger()
+    shadow = {}        # phys page -> tokens written (partial on last page)
+    owners = {}        # owner -> its committed tokens
+    swapped = {}       # owner -> {logical idx: host tokens} (landed)
+    in_flight = {}     # handle -> (owner, host map, {page: begin contents})
+    next_owner = 0
+    token = st.integers(0, 1)
+
+    def land(handle):
+        o, host, _ = in_flight.pop(handle)
+        ledger.complete(handle)
+        swapped[o] = host
+
+    def wait_pages(pages, what):
+        # the executor waits out transfers before reusing their pages, so
+        # the discipline check below can never fire on this model — that
+        # is exactly the property under test
+        for h in list(in_flight):
+            if h in ledger.handles() and (
+                    set(pages) & set(in_flight[h][2])):
+                land(h)
+        ledger.assert_idle(pages, what)
+
+    def wait_owner(o):
+        for h in ledger.handles(o):
+            land(h)
+
+    def swapping():
+        return {o for o, _, _ in in_flight.values()}
+
+    ops = data.draw(st.lists(st.sampled_from(
+        ["new", "share_new", "free", "fork", "spec", "swap_out",
+         "complete", "swap_in"]), min_size=1, max_size=40))
+    for op in ops:
+        if op == "new":
+            toks = tuple(data.draw(
+                st.lists(token, min_size=1, max_size=8), label="prompt"))
+            o, next_owner = next_owner, next_owner + 1
+            try:
+                pool.alloc(o, len(toks))
+            except OutOfPages:
+                pool.check()
+                continue
+            tbl = pool.page_table(o)
+            wait_pages(tbl, "write")        # fresh pages may be mid-gather
+            for li, p in enumerate(tbl):
+                shadow[p] = toks[li * PSZ:(li + 1) * PSZ]
+            owners[o] = toks
+        elif op == "share_new" and set(owners) - set(swapped) - swapping():
+            # a second owner shares a donor's full prefix pages (the
+            # prefix-cache path), then writes only its private suffix
+            donor = data.draw(st.sampled_from(
+                sorted(set(owners) - set(swapped) - swapping())),
+                label="donor")
+            dt = owners[donor]
+            k = len(dt) // PSZ
+            if k == 0:
+                continue
+            suffix = tuple(data.draw(
+                st.lists(token, min_size=1, max_size=4), label="suffix"))
+            toks = dt[:k * PSZ] + suffix
+            o, next_owner = next_owner, next_owner + 1
+            pool.share(o, pool.page_table(donor)[:k], k * PSZ)
+            try:
+                pool.extend(o, len(toks))
+            except OutOfPages:
+                pool.free(o)
+                pool.check()
+                continue
+            tbl = pool.page_table(o)
+            wait_pages(tbl[k:], "write")
+            for li in range(k, len(tbl)):
+                shadow[tbl[li]] = toks[li * PSZ:(li + 1) * PSZ]
+            owners[o] = toks
+        elif op == "free" and owners:
+            o = data.draw(st.sampled_from(sorted(owners)), label="free")
+            wait_owner(o)                   # release waits (executor)
+            if pool.holds(o) and not pool.is_swapped(o):
+                wait_pages(pool.page_table(o), "free")
+            pool.free(o)
+            del owners[o]
+            swapped.pop(o, None)
+        elif op == "swap_out" and set(owners) - set(swapped) - swapping():
+            o = data.draw(st.sampled_from(
+                sorted(set(owners) - set(swapped) - swapping())),
+                label="swap_out")
+            released = pool.swap_out(o)
+            if not released:       # fully shared: suspension is pure
+                swapped[o] = {}    # bookkeeping, nothing to transfer
+                continue
+            # functional-snapshot semantics: host contents are captured at
+            # enqueue; the ledger guards the window until the copy lands
+            host = {li: shadow[p] for li, p in released}
+            pages = [p for _, p in released]
+            h = ledger.begin(o, pages)
+            in_flight[h] = (o, host, {p: shadow.get(p) for p in pages})
+        elif op == "complete" and in_flight:
+            land(data.draw(st.sampled_from(sorted(in_flight)),
+                           label="complete"))
+        elif op == "swap_in" and (swapped or swapping()):
+            o = data.draw(st.sampled_from(
+                sorted(set(swapped) | swapping())), label="swap_in")
+            wait_owner(o)                   # resume waits (executor)
+            try:
+                restored = pool.swap_in(o)
+            except OutOfPages:
+                pool.check()
+                continue
+            host = swapped.pop(o)
+            assert sorted(li for li, _ in restored) == sorted(host)
+            for li, p in restored:
+                wait_pages([p], "write")
+                shadow[p] = host[li]
+        elif op == "fork" and set(owners) - set(swapped) - swapping():
+            o = data.draw(st.sampled_from(
+                sorted(set(owners) - set(swapped) - swapping())),
+                label="fork")
+            tbl = pool.page_table(o)
+            li = data.draw(st.integers(0, len(tbl) - 1), label="page")
+            wait_pages([tbl[li]], "fork")   # never CoW-fork a busy source
+            try:
+                forked = pool.fork(o, li)
+            except OutOfPages:
+                forked = None
+            if forked is not None:
+                wait_pages([forked[1]], "write")
+                shadow[forked[1]] = shadow[forked[0]]
+        elif op == "spec" and set(owners) - set(swapped) - swapping():
+            o = data.draw(st.sampled_from(
+                sorted(set(owners) - set(swapped) - swapping())),
+                label="spec")
+            toks = owners[o]
+            L = len(toks)
+            k = data.draw(st.integers(1, 4), label="depth")
+            draft = tuple(data.draw(
+                st.lists(token, min_size=k, max_size=k), label="draft"))
+            try:
+                pool.extend(o, L + k)
+            except OutOfPages:
+                pool.check()
+                continue
+            new = toks + draft
+            tbl = pool.page_table(o)
+            wait_pages(tbl[L // PSZ:], "write")
+            for li in range(L // PSZ, len(tbl)):
+                shadow[tbl[li]] = new[li * PSZ:(li + 1) * PSZ]
+            n_acc = data.draw(st.integers(0, k), label="accept")
+            commit = L + n_acc
+            pool.truncate(o, commit)
+            owners[o] = new[:commit]
+            tbl = pool.page_table(o)
+            if tbl and commit > 0:
+                li = len(tbl) - 1
+                shadow[tbl[li]] = new[li * PSZ: commit]
+        # ---- per-step audits ----
+        ledger.check()
+        pool.check()
+        for h, (_, _, snap) in in_flight.items():
+            for p, v in snap.items():       # busy pages never written
+                assert shadow.get(p) == v, (
+                    f"page {p} mutated while transfer {h} outstanding")
+        for o, toks in owners.items():
+            if o in swapped or o in swapping():
+                continue
+            for li, p in enumerate(pool.page_table(o)):
+                got = shadow[p]
+                assert got == toks[li * PSZ: li * PSZ + len(got)]
+    # ---- forced drain: land everything, audits must still hold ----
+    for h in list(in_flight):
+        land(h)
+    ledger.check()
+    assert ledger.busy_pages() == frozenset()
+    assert ledger.started == ledger.completed
+    for o, host in swapped.items():         # landed copies carry the tokens
+        for li, got in host.items():
+            assert got == owners[o][li * PSZ: li * PSZ + len(got)]
+    for o in list(owners):
+        pool.free(o)
+    pool.check()
+    assert pool.used_pages == 0             # zero leaks
+
+
+@given(st.data())
+@settings(max_examples=60, deadline=None)
 def test_sharded_slab_interleavings_no_leaks_no_cross_device_aliasing(data):
     """DESIGN.md §9 safety, modelled: under tensor parallelism the page
     table is ONE replicated structure addressing NDEV per-device head
