@@ -61,6 +61,15 @@ GATES = [
     ("async_pipeline", ("engine", "swap_overlapped"), "high", 0.0),
     ("async_pipeline", ("engine", "pages_leaked"), "low", 0.0),
     ("async_pipeline", ("engine", "transfers_outstanding"), "low", 0.0),
+    # gate 7: fleet routing — the routed two-tier fleet strictly beats both
+    # single-tier deployments at equal simulated compute, every deployment
+    # drains without leaking pages, and the degenerate single-instance
+    # fleet is byte-identical to the single-model serving loop
+    ("fleet_routing", ("sim", "fleet", "slo"), "high", 0.05),
+    ("fleet_routing", ("sim", "fleet", "rt_slo"), "high", 0.05),
+    ("fleet_routing", ("sim", "routing_beats_both"), "high", 0.0),
+    ("fleet_routing", ("sim", "fleet", "pages_leaked"), "low", 0.0),
+    ("fleet_routing", ("sim", "degenerate_equal"), "high", 0.0),
 ]
 
 
@@ -133,7 +142,8 @@ def main() -> None:
                     help="skip real-JAX-engine measurements (faster)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig1,table2,fig7,fig10,"
-                         "fig11,kv,prefill,prefix,swap,spec,sharded,async")
+                         "fig11,kv,prefill,prefix,swap,spec,sharded,async,"
+                         "fleet")
     ap.add_argument("--tiny", action="store_true",
                     help="CI smoke configs for the benches that have one")
     ap.add_argument("--check", action="store_true",
@@ -149,10 +159,11 @@ def main() -> None:
                  "(baselines are recorded at the tiny CI config)")
     only = set(args.only.split(",")) if args.only else None
 
-    from benchmarks import (async_pipeline, dynamic_slo, kv_pressure,
-                            kv_swap, latency_vs_batch, prefill_interference,
-                            prefix_sharing, ratio_sweep, sharded_serving,
-                            spec_decode, static_tpot, workload_sweep)
+    from benchmarks import (async_pipeline, dynamic_slo, fleet_routing,
+                            kv_pressure, kv_swap, latency_vs_batch,
+                            prefill_interference, prefix_sharing,
+                            ratio_sweep, sharded_serving, spec_decode,
+                            static_tpot, workload_sweep)
 
     print("name,value,derived")
     t0 = time.time()
@@ -181,6 +192,8 @@ def main() -> None:
         sharded_serving.run(tiny=args.tiny)
     if only is None or "async" in only:
         async_pipeline.run(tiny=args.tiny)
+    if only is None or "fleet" in only:
+        fleet_routing.run(tiny=args.tiny, engine=not args.skip_engine)
     print(f"total_wall_s,{time.time() - t0:.1f},", flush=True)
 
     ran = {"prefill_interference"} if only is None or "prefill" in only else set()
@@ -194,6 +207,8 @@ def main() -> None:
         ran.add("sharded_serving")
     if only is None or "async" in only:
         ran.add("async_pipeline")
+    if only is None or "fleet" in only:
+        ran.add("fleet_routing")
     if args.update_baselines:
         update_baselines(sorted(ran & set(_gated_benches())))
     if args.check:

@@ -85,6 +85,21 @@ class Scheduler:
     def unfinished(self) -> int:
         raise NotImplementedError
 
+    def withdraw(self, task: Task) -> bool:
+        """Fleet spill re-routing (DESIGN.md §11): remove a queued task
+        this scheduler has NOT started serving, so the fleet can hand it
+        to an idle peer. Returns False when the task has engine-side
+        progress here (prefilled tokens, decoded tokens, swapped KV) —
+        such a task must stay where its state lives."""
+        return False
+
+    def on_idle(self, now: float) -> None:
+        """Fleet-loop poke after an idle clock tick (DESIGN.md §11):
+        admission can be time-dependent (deadline pruning frees Eq. 7
+        capacity a blocked plan needs), so an idle instance with deferred
+        work gets its clock advanced and this nudge to replan. Default:
+        nothing is time-dependent."""
+
 
 # --------------------------------------------------------------------- SLICE
 
@@ -561,9 +576,36 @@ class SliceScheduler(Scheduler):
             return self._make_chunk_action()
         return None
 
+    def withdraw(self, task: Task) -> bool:
+        if (task.prefill_done_tokens > 0 or task.tokens_done > 0
+                or task.suspended):
+            return False
+        removed = False
+        if task in self.pool:
+            self.pool.remove(task)
+            removed = True
+        if task in self.batch:
+            self.batch.remove(task)
+            removed = True
+        if not removed:
+            return False
+        for q in (self.prefill_queue, self.suspend_queue, self.resume_queue):
+            if task in q:
+                q.remove(task)
+        self.delivered.pop(task.task_id, None)
+        self.depth_of.pop(task.task_id, None)
+        self.need_resched = True           # mask row is gone: rebuild
+        return True
+
     def unfinished(self) -> int:
         return sum(1 for t in self.batch + self.pool
                    if not t.finished and not t.dropped)
+
+    def on_idle(self, now: float) -> None:
+        """A later ``now`` can unblock a plan that admitted nothing: the
+        greedy selection prefix stalls behind an alone-infeasible realtime
+        head task until _drop_hopeless prunes it at its deadline."""
+        self.need_resched = True
 
 
 def sjf_decay_adaptor(half_life_tokens: float = 64.0):
@@ -606,6 +648,12 @@ class OrcaScheduler(Scheduler):
 
     def note_prefilled(self, task: Task) -> None:
         self.running.append(task)
+
+    def withdraw(self, task: Task) -> bool:
+        if task in self.waiting and task.tokens_done == 0:
+            self.waiting.remove(task)
+            return True
+        return False
 
     def unfinished(self) -> int:
         return len(self.waiting) + sum(1 for t in self.running if not t.finished)
@@ -780,6 +828,12 @@ class FastServeScheduler(Scheduler):
                 self.queue_of[tid] += 1
                 self.tokens_in_queue[tid] = 0
         return DecodeAction(batch)
+
+    def withdraw(self, task: Task) -> bool:
+        if task in self.waiting and task.tokens_done == 0:
+            self.waiting.remove(task)
+            return True
+        return False
 
     def unfinished(self) -> int:
         return len(self.waiting) + sum(1 for t in self.running if not t.finished)

@@ -163,6 +163,84 @@ def task_selection(tasks: Sequence[Task], lat: LatencyModel,
     return selected, deferred
 
 
+# ------------------------------------------------------- fleet routing (§11)
+
+@dataclasses.dataclass
+class InstanceView:
+    """Routing snapshot of one fleet member (DESIGN.md §11): everything the
+    cross-instance comparison needs, decoupled from scheduler/executor
+    internals so the router prices a SimExecutor tier and a PagedJaxExecutor
+    tier with the same arithmetic.
+
+    ``rates_desc`` are the quantized SLO rates of the tasks already routed
+    to the instance and still unfinished — the live Eq. 7 load. ``free_pages``
+    is the instance's page headroom right now (None = unbounded / slot
+    executor). ``quality`` scales realized utility by model tier, so a
+    quality-weighted request prefers the large model when both tiers are
+    time-feasible."""
+    tier: int
+    lat: LatencyModel
+    rates_desc: List[int]
+    free_pages: Optional[int] = None
+    page_budget: Optional[PageBudget] = None
+    quality: float = 1.0
+
+
+def instance_cost_ms(task: Task, view: InstanceView) -> float:
+    """Predicted engine time the task would consume on an instance: its
+    prefill plus its output tokens priced at the decode batch it would
+    join, amortized per co-batched task. This is the denominator of the
+    Eq. 7-style routing score — a slow tier or a crowded instance both
+    raise it."""
+    b = max(1, len(view.rates_desc) + 1)
+    return (view.lat.prefill_ms(task.prompt_len)
+            + task.output_len * view.lat.decode_ms(b) / b)
+
+
+def route_score(task: Task, view: InstanceView,
+                budget_ms: float = PERIOD_BUDGET_MS) -> Optional[float]:
+    """Eq. 7-priced marginal utility per predicted cost of serving ``task``
+    on one instance; None when admission there is predicted infeasible —
+    the cycle-period test (Eq. 7) over the instance's live rates plus this
+    task, and the page-headroom test against its pool."""
+    if view.page_budget is not None and view.page_budget.infeasible(task):
+        return None
+    cand = sorted(view.rates_desc + [quantized_rate(task.slo.tpot_ms)],
+                  reverse=True)
+    if estimate_period_ms(cand, view.lat) >= budget_ms:
+        return None
+    if (view.free_pages is not None and view.page_budget is not None
+            and view.page_budget.pages_for(task) > view.free_pages):
+        return None
+    return view.quality * task.utility_rate / instance_cost_ms(task, view)
+
+
+def route_request(task: Task, views: Sequence[InstanceView],
+                  budget_ms: float = PERIOD_BUDGET_MS) -> Tuple[int, bool]:
+    """Cross-instance comparison (DESIGN.md §11): pick the feasible
+    instance of qualifying tier (>= task.min_tier) with the highest
+    marginal utility per predicted cost. When every qualifying tier is
+    page- or headroom-starved, fall back DOWN-tier to the best-scoring
+    feasible instance — degraded service beats deferring. When every
+    instance is starved, overflow to the least-loaded one (it queues).
+
+    Returns (index into views, degraded) — degraded=True when the chosen
+    tier is below the task's min_tier."""
+    scored = [(route_score(task, v, budget_ms), j)
+              for j, v in enumerate(views)]
+    eligible = [(s, j) for s, j in scored
+                if s is not None and views[j].tier >= task.min_tier]
+    if eligible:
+        return max(eligible, key=lambda sj: (sj[0], -sj[1]))[1], False
+    feasible = [(s, j) for s, j in scored if s is not None]
+    if feasible:
+        j = max(feasible, key=lambda sj: (sj[0], -sj[1]))[1]
+        return j, views[j].tier < task.min_tier
+    j = min(range(len(views)),
+            key=lambda k: (len(views[k].rates_desc), k))
+    return j, views[j].tier < task.min_tier
+
+
 def select_swap_victims(shortfall_pages: int, candidates: Sequence[Task],
                         budget: PageBudget,
                         protect: Sequence[Task] = ()) -> List[Task]:

@@ -53,6 +53,18 @@ class Task:
     prefix_group: Optional[int] = None
     prefix_len: int = 0
 
+    # fleet routing (DESIGN.md §11): quality-tier requests demand a model
+    # tier >= min_tier (0 = any model qualifies — the single-model default,
+    # which leaves slo_met unchanged). routed_to is the fleet-layer
+    # admission record (written once, never moved); served_by/served_tier
+    # name the instance that actually serves the tokens — a spill rewrites
+    # these BEFORE any engine-side progress, so token attribution is
+    # always unique.
+    min_tier: int = 0
+    routed_to: Optional[str] = None
+    served_by: Optional[str] = None
+    served_tier: Optional[int] = None
+
     # runtime accounting (filled by the serving loop)
     prefill_done_ms: Optional[float] = None
     prefill_done_tokens: int = 0       # prompt tokens cached (chunked prefill)
@@ -115,10 +127,23 @@ class Task:
             return None
         return self.token_times_ms[-1] - self.arrival_ms
 
+    def tier_met(self) -> bool:
+        """Fleet routing (DESIGN.md §11): a quality-tier request counts
+        only when served by a model of at least its tier — degraded-mode
+        fallback keeps it flowing but not attaining. Tasks with
+        min_tier == 0 (every single-model workload) always pass."""
+        if self.min_tier <= 0:
+            return True
+        return self.served_tier is not None and self.served_tier >= self.min_tier
+
     def slo_met(self) -> bool:
         """Paper §VI-A Metrics: RT -> completion <= deadline;
-        non-RT -> TTFT and TPOT SLOs both satisfied."""
+        non-RT -> TTFT and TPOT SLOs both satisfied. Quality-tier
+        requests (min_tier > 0) additionally require a qualifying model
+        tier (DESIGN.md §11)."""
         if self.dropped or not self.finished:
+            return False
+        if not self.tier_met():
             return False
         if self.slo.realtime:
             return self.completion_ms <= self.slo.deadline_ms

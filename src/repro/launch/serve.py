@@ -42,10 +42,109 @@ mesh (see dryrun.py for the lowering proof).
   # byte-identical streams to the synchronous reference
   PYTHONPATH=src python -m repro.launch.serve --executor paged \
       --async-pipeline
+
+  # fleet routing (DESIGN.md §11): N model tiers (small -> large) behind
+  # one admission layer — tight-TPOT realtime traffic lands on the fast
+  # tier, quality requests on the large one, with degraded down-tier
+  # fallback and overflow spill between instances
+  PYTHONPATH=src python -m repro.launch.serve --executor paged \
+      --fleet smollm-360m,edge-6b
 """
 from __future__ import annotations
 
 import argparse
+
+
+def _run_fleet(args):
+    """--fleet path: one PagedJaxExecutor + SliceScheduler per arch under
+    a single FleetRouter. With ONE arch this produces byte-identical
+    streams to the single-model run_serving_loop path (same event order,
+    same engines) — the degenerate config costs nothing."""
+    from repro.configs import get_config
+    from repro.core.schedulers import SliceScheduler
+    from repro.data.workload import poisson_workload
+    from repro.serving.executor import PagedJaxExecutor
+    from repro.serving.fleet import FleetInstance, FleetRouter, run_fleet_loop
+    from repro.serving.metrics import per_tier, summarize
+
+    archs = [a.strip() for a in args.fleet.split(",") if a.strip()]
+    if not archs:
+        raise SystemExit("--fleet wants a comma-separated arch list ordered "
+                         "small -> large, e.g. smollm-360m,edge-6b")
+    n_pages = args.pages or (args.slots * args.max_seq) // args.page_size
+    insts = []
+    for tier, arch in enumerate(archs):
+        cfg = get_config(arch)
+        if args.reduced:
+            cfg = cfg.reduced()
+        if cfg.is_encoder_only:
+            raise SystemExit(f"{arch} is encoder-only: no decode serving "
+                             "(DESIGN.md §4)")
+        if args.prefill_chunk is not None and (not cfg.has_attention
+                                               or cfg.has_ssm):
+            raise SystemExit(f"{arch}: chunked prefill needs a "
+                             "pure-attention arch (DESIGN.md §5)")
+        draft_cfg = None
+        if args.spec_decode and args.draft_config is not None:
+            from repro.serving.spec_decode import draft_config_from_registry
+            draft_cfg = draft_config_from_registry(args.draft_config, cfg)
+        ex = PagedJaxExecutor(cfg, n_pages=n_pages, page_size=args.page_size,
+                              max_seq=args.max_seq, seed=args.seed,
+                              max_batch=args.slots,
+                              use_paged_kernel=args.paged_kernel,
+                              prefill_chunk_size=args.prefill_chunk,
+                              prefix_cache=args.prefix_cache,
+                              spec_decode=args.spec_decode,
+                              draft_cfg=draft_cfg,
+                              max_spec_depth=args.spec_depth,
+                              async_dispatch=args.async_pipeline)
+        budget = ex.page_budget()
+        lat = ex.latency_model()
+        lat.swap_bw_gbps = args.swap_bw_gbps
+        prefix_hint = ex.cached_prompt_tokens if args.prefix_cache else None
+        sched = SliceScheduler(lat, page_budget=budget,
+                               prefill_chunk=args.prefill_chunk,
+                               prefix_hint=prefix_hint,
+                               kv_swap=args.kv_swap,
+                               spec_decode=args.spec_decode,
+                               max_spec_depth=args.spec_depth)
+        print(f"fleet[{tier}] {cfg.name}: l(1)={lat.decode_ms(1):.2f}ms "
+              f"l({args.slots})={lat.decode_ms(args.slots):.2f}ms")
+        insts.append(FleetInstance(name=arch, tier=tier, scheduler=sched,
+                                   executor=ex, lat=lat, page_budget=budget,
+                                   quality=(tier + 1) / len(archs)))
+    router = FleetRouter(insts)
+    # scale the paper's workload SLOs to the SLOWEST instance so quality-
+    # tier requests are achievable on the model that must serve them; with
+    # one arch this is exactly the single-model path's scaling
+    scale = max(max(i.lat.decode_ms(max(2, args.slots // 2))
+                    for i in insts) / 50.0, 0.02)
+    tasks = poisson_workload(args.rate, args.duration,
+                             realtime_frac=args.ratio,
+                             seed=args.seed, rt_output_len=8,
+                             voice_output_len=24, qa_output_len=32,
+                             shared_prefix_frac=args.shared_prefix_frac,
+                             prefix_len_range=(args.max_seq // 8,
+                                               args.max_seq // 4))
+    top = len(archs) - 1
+    for t in tasks:
+        t.slo.tpot_ms *= scale
+        t.slo.ttft_ms *= max(scale, 1.0)
+        if t.slo.deadline_ms:
+            t.slo.deadline_ms *= max(scale, 1.0)
+        t.prompt_len = min(t.prompt_len, args.max_seq // 4)
+        t.prefix_len = min(t.prefix_len, t.prompt_len)
+        t.output_len = min(t.output_len, args.max_seq // 2)
+        if top > 0 and t.kind == "qa":
+            t.min_tier = top           # quality tier: wants the big model
+    res = run_fleet_loop(router, tasks, max_ms=3e7)
+    s = summarize(res.tasks)
+    print(f"fleet({','.join(archs)}): n={s['all'].n} SLO={s['all'].slo:.1%} "
+          f"RT={s['realtime'].slo:.1%} nRT={s['non_realtime'].slo:.1%} "
+          f"spills={res.spills} degraded={res.degraded}")
+    for name, a in per_tier(res.tasks).items():
+        print(f"  {name}: served={a.n} "
+              f"admitted={res.admissions.get(name, 0)} SLO={a.slo:.1%}")
 
 
 def main():
@@ -107,6 +206,12 @@ def main():
                          "transfers overlap decode on a background "
                          "worker. Streams and metrics stay byte-"
                          "identical to the synchronous engine")
+    ap.add_argument("--fleet", default=None,
+                    help="comma-separated registry archs ordered small -> "
+                         "large: run one paged SLICE instance per arch "
+                         "behind a single routing/admission layer "
+                         "(DESIGN.md §11). A single-arch fleet is byte-"
+                         "identical to the plain single-model path")
     ap.add_argument("--mesh-shape", default=None,
                     help="paged executor: 'data,model' serving mesh, e.g. "
                          "1,4 — shards weights + the KV page arena over "
@@ -139,6 +244,19 @@ def main():
             os.environ["XLA_FLAGS"] = (
                 os.environ.get("XLA_FLAGS", "")
                 + f" --xla_force_host_platform_device_count={n}").strip()
+
+    if args.fleet is not None:
+        if args.executor != "paged":
+            raise SystemExit("--fleet requires --executor paged (every "
+                             "instance is a paged SLICE engine)")
+        if args.scheduler != "slice":
+            raise SystemExit("--fleet routes onto per-instance SLICE "
+                             "schedulers; Orca/FastServe fleets are not "
+                             "a thing here")
+        if mesh_shape is not None:
+            raise SystemExit("--fleet with --mesh-shape is not supported "
+                             "(one XLA device pool per process)")
+        return _run_fleet(args)
 
     from repro.configs import get_config
     from repro.core.schedulers import (FastServeScheduler, OrcaScheduler,

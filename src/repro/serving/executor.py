@@ -178,8 +178,10 @@ class Executor:
 
 
 class SimExecutor(Executor):
-    def __init__(self, lat: LatencyModel, scheduling_overhead_ms: float = 0.0):
+    def __init__(self, lat: LatencyModel, scheduling_overhead_ms: float = 0.0,
+                 name: Optional[str] = None):
         self.lat = lat
+        self.name = name               # fleet-instance identity (DESIGN.md §11)
         self.overhead = scheduling_overhead_ms
         self.decode_steps = 0
         self.prefill_steps = 0
@@ -281,12 +283,19 @@ class PagedSimExecutor(SimExecutor):
     is the PageBudget to hand the scheduler."""
 
     def __init__(self, lat: LatencyModel, total_pages: int, page_size: int,
-                 scheduling_overhead_ms: float = 0.0):
-        super().__init__(lat, scheduling_overhead_ms)
+                 scheduling_overhead_ms: float = 0.0,
+                 name: Optional[str] = None):
+        super().__init__(lat, scheduling_overhead_ms, name=name)
         self.held: Dict[int, int] = {}
         self.budget = PageBudget(
             total_pages=total_pages, page_size=page_size,
             held_pages=lambda t: self.held.get(t.task_id, 0))
+
+    @property
+    def used_pages(self) -> int:
+        """Pages currently pinned — the sim-side analogue of
+        PagePool.used_pages, so fleet leak checks read uniformly."""
+        return sum(self.held.values())
 
     def prefill(self, task: Task) -> float:
         self.held[task.task_id] = self.budget.pages_for(task)

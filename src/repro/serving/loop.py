@@ -28,12 +28,20 @@ blocked time into ``now`` as it lands (exactly once — tracked by a
 wait-ms watermark) and drains the pipeline before reporting, keeping
 end_ms meaningful while the policy-visible event ORDER stays identical
 to the sync engine's.
+
+Fleet serving (DESIGN.md §11): the per-instance half of the loop lives in
+``InstanceDriver`` — clock, action execution, wait folding, drop release —
+so ``run_serving_loop`` (one driver, the single-model path, byte-identical
+to the pre-fleet loop) and ``repro.serving.fleet.run_fleet_loop`` (N
+drivers advanced lowest-clock-first, like N concurrent edge devices) share
+one cycle engine. ``merge_results`` folds per-instance LoopResults into a
+fleet-wide one.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence
 
 from repro.core.schedulers import (DecodeAction, PrefillAction,
                                    PrefillChunkAction, ResumeAction,
@@ -76,88 +84,95 @@ class LoopResult:
     pipeline_stalls: int = 0
 
 
-def run_serving_loop(scheduler: Scheduler, executor: Executor,
-                     workload: Sequence[Task], max_ms: float = 600_000.0,
-                     idle_gas: int = 10_000_000) -> LoopResult:
-    arrivals = sorted(workload, key=lambda t: (t.arrival_ms, t.task_id))
-    i = 0
-    now = 0.0
-    n_decode = n_prefill = n_chunks = 0
-    n_suspend = n_resume = 0
-    n_spec_extra = 0
-    gas = idle_gas
-    tracked: List[Task] = []   # delivered, neither finished nor dropped yet
-    # host/device gap accounting (DESIGN.md §10): report per-RUN deltas of
-    # the executor's GapStats; under async dispatch, fold commit waits into
-    # `now` exactly once via the wait-ms watermark (executor ops return
-    # dispatch-only times there).
-    stats = getattr(executor, "gap_stats", None)
-    async_mode = bool(getattr(executor, "async_dispatch", False))
-    base = stats.as_dict() if stats is not None else None
-    wait_seen = base["wait_ms"] if base is not None else 0.0
+class InstanceDriver:
+    """One (scheduler, executor) pair's share of the serving loop: the
+    instance clock, action execution, drop release, and async wait folding.
 
-    def fold_wait() -> None:
-        nonlocal now, wait_seen
-        if stats is None or not async_mode:
+    ``step()`` runs exactly one scheduler action (returning False when the
+    scheduler is idle); arrival delivery stays with the caller — the
+    single-model loop delivers from one sorted stream, the fleet loop
+    routes each arrival to a driver first (DESIGN.md §11). The body of
+    ``step()`` is the pre-fleet loop body verbatim, so the single-driver
+    path stays byte-identical to it."""
+
+    def __init__(self, scheduler: Scheduler, executor: Executor):
+        self.scheduler = scheduler
+        self.executor = executor
+        self.now = 0.0
+        self.n_decode = 0
+        self.n_prefill = 0
+        self.n_chunks = 0
+        self.n_suspend = 0
+        self.n_resume = 0
+        self.n_spec_extra = 0
+        self.tracked: List[Task] = []  # delivered, not finished/dropped yet
+        # host/device gap accounting (DESIGN.md §10): report per-RUN deltas
+        # of the executor's GapStats; under async dispatch, fold commit
+        # waits into the clock exactly once via the wait-ms watermark
+        # (executor ops return dispatch-only times there).
+        self.stats = getattr(executor, "gap_stats", None)
+        self.async_mode = bool(getattr(executor, "async_dispatch", False))
+        self.base = self.stats.as_dict() if self.stats is not None else None
+        self.wait_seen = self.base["wait_ms"] if self.base is not None else 0.0
+
+    def fold_wait(self) -> None:
+        if self.stats is None or not self.async_mode:
             return
-        d = stats.wait_ms - wait_seen
+        d = self.stats.wait_ms - self.wait_seen
         if d > 0:
-            now += d
-        wait_seen = stats.wait_ms
+            self.now += d
+        self.wait_seen = self.stats.wait_ms
 
-    def deliver_arrivals(upto: float) -> None:
-        nonlocal i
-        while i < len(arrivals) and arrivals[i].arrival_ms <= upto:
-            scheduler.on_arrival(arrivals[i], now=max(now, arrivals[i].arrival_ms))
-            tracked.append(arrivals[i])
-            i += 1
+    def deliver(self, task: Task) -> None:
+        self.scheduler.on_arrival(task, now=max(self.now, task.arrival_ms))
+        self.tracked.append(task)
 
-    def release_dropped() -> None:
+    def release_dropped(self) -> None:
         # dropped tasks never reach the finish path below, so their KV
         # (slots or pages) must be reclaimed here or it leaks for the rest
         # of the run — and memory-aware admission would over-promise.
         still = []
-        for t in tracked:
+        for t in self.tracked:
             if t.dropped:
-                executor.release(t)
+                self.executor.release(t)
             elif not t.finished:
                 still.append(t)
-        tracked[:] = still
+        self.tracked[:] = still
 
-    deliver_arrivals(0.0)
-    while now < max_ms:
-        gas -= 1
-        if gas <= 0:
-            raise RuntimeError("serving loop did not converge")
+    def live_tasks(self) -> List[Task]:
+        """Delivered tasks still in flight here — the routing view's load."""
+        return [t for t in self.tracked if not t.finished and not t.dropped]
+
+    def step(self) -> bool:
+        """Run one scheduler action; False when the scheduler is idle
+        (nothing executed, clock untouched — the caller decides whether
+        to jump to the next arrival, spill work in, or stop)."""
+        scheduler, executor = self.scheduler, self.executor
         t_sched = time.perf_counter()
-        action = scheduler.next_action(now)   # may drop tasks (reschedule)
-        if stats is not None:
-            stats.schedule_ms += (time.perf_counter() - t_sched) * 1000.0
-        release_dropped()
+        action = scheduler.next_action(self.now)  # may drop (reschedule)
+        if self.stats is not None:
+            self.stats.schedule_ms += (time.perf_counter() - t_sched) * 1000.0
+        self.release_dropped()
         if action is None:
-            if i < len(arrivals):            # idle -> jump to next arrival
-                now = max(now, arrivals[i].arrival_ms)
-                deliver_arrivals(now)
-                continue
-            break                            # drained
+            return False
         if isinstance(action, PrefillAction):
             t = action.task
             ms = executor.prefill(t)
-            now += ms
+            self.now += ms
             t.prefill_done_tokens = t.prompt_len
-            t.prefill_done_ms = now
-            t.token_times_ms.append(now)     # first token at prefill end
-            n_prefill += 1
+            t.prefill_done_ms = self.now
+            t.token_times_ms.append(self.now)  # first token at prefill end
+            self.n_prefill += 1
             if hasattr(scheduler, "note_prefilled"):
                 scheduler.note_prefilled(t)
             if t.finished:
-                scheduler.on_finish(t, now)
+                scheduler.on_finish(t, self.now)
                 executor.release(t)
         elif isinstance(action, PrefillChunkAction):
             t = action.task
             ms, done = executor.prefill_chunk(t, action.n_tokens)
-            now += ms
-            n_chunks += 1
+            self.now += ms
+            self.n_chunks += 1
             t.prefill_done_tokens = min(t.prompt_len,
                                         t.prefill_done_tokens + action.n_tokens)
             # prefix-cache credit (DESIGN.md §6): an executor that skipped
@@ -170,13 +185,13 @@ def run_serving_loop(scheduler: Scheduler, executor: Executor,
             if done:
                 # first token at FINAL chunk completion (TTFT convention)
                 t.prefill_done_tokens = t.prompt_len
-                t.prefill_done_ms = now
-                t.token_times_ms.append(now)
-                n_prefill += 1
+                t.prefill_done_ms = self.now
+                t.token_times_ms.append(self.now)
+                self.n_prefill += 1
                 if hasattr(scheduler, "note_prefilled"):
                     scheduler.note_prefilled(t)
                 if t.finished:
-                    scheduler.on_finish(t, now)
+                    scheduler.on_finish(t, self.now)
                     executor.release(t)
         elif isinstance(action, SuspendAction):
             # KV to host (DESIGN.md §7); the flag flips only once the
@@ -193,9 +208,9 @@ def run_serving_loop(scheduler: Scheduler, executor: Executor,
                 else:
                     raise
             else:
-                now += ms
+                self.now += ms
                 t.suspended = True
-                n_suspend += 1
+                self.n_suspend += 1
         elif isinstance(action, ResumeAction):
             t = action.task
             try:
@@ -208,9 +223,9 @@ def run_serving_loop(scheduler: Scheduler, executor: Executor,
                 else:
                     raise
             else:
-                now += ms
+                self.now += ms
                 t.suspended = False
-                n_resume += 1
+                self.n_resume += 1
         elif isinstance(action, DecodeAction):
             if action.depths is not None:
                 # speculative iteration (DESIGN.md §8): the executor
@@ -219,54 +234,122 @@ def run_serving_loop(scheduler: Scheduler, executor: Executor,
                 # iteration's completion time (burst delivery), and the
                 # scheduler's per-cycle credit is told about the extras
                 ms = executor.decode(action.tasks, action.depths)
-                now += ms
-                n_decode += 1
+                self.now += ms
+                self.n_decode += 1
                 commits = list(getattr(executor, "last_commits", None)
                                or [1] * len(action.tasks))
                 for t, c in zip(action.tasks, commits):
                     c = max(1, min(c, t.output_len - t.tokens_done))
-                    t.token_times_ms.extend([now] * c)
-                    n_spec_extra += c - 1
+                    t.token_times_ms.extend([self.now] * c)
+                    self.n_spec_extra += c - 1
                     if c > 1 and hasattr(scheduler, "note_decoded"):
                         scheduler.note_decoded(t, c)
                     if t.finished:
-                        scheduler.on_finish(t, now)
+                        scheduler.on_finish(t, self.now)
                         executor.release(t)
             else:
                 ms = executor.decode(action.tasks)
-                now += ms
-                n_decode += 1
+                self.now += ms
+                self.n_decode += 1
                 for t in action.tasks:
-                    t.token_times_ms.append(now)
+                    t.token_times_ms.append(self.now)
                     if t.finished:
-                        scheduler.on_finish(t, now)
+                        scheduler.on_finish(t, self.now)
                         executor.release(t)
-        fold_wait()
-        deliver_arrivals(now)
-    drain = getattr(executor, "drain", None)
-    if drain is not None:      # commit in-flight steps + background swaps
-        drain()
-        fold_wait()
-    gaps = {}
-    stalls = 0
-    if stats is not None:
-        end = stats.as_dict()
-        gaps = {k: end[k] - base[k] for k in
-                ("schedule_ms", "dispatch_ms", "wait_ms", "swap_overlap_ms")}
-        stalls = int(end["stalls"] - base["stalls"])
-    return LoopResult(tasks=list(arrivals), end_ms=now,
-                      decode_iterations=n_decode, prefills=n_prefill,
-                      prefill_chunks=n_chunks,
-                      suspends=n_suspend, resumes=n_resume,
-                      swapped_bytes=float(getattr(executor, "swapped_bytes",
-                                                  0.0)),
-                      spec_extra_tokens=n_spec_extra,
-                      drafted_tokens=int(getattr(executor, "drafted_tokens",
-                                                 0)),
-                      accepted_tokens=int(getattr(executor,
-                                                  "accepted_tokens", 0)),
-                      schedule_ms=gaps.get("schedule_ms", 0.0),
-                      dispatch_ms=gaps.get("dispatch_ms", 0.0),
-                      wait_ms=gaps.get("wait_ms", 0.0),
-                      swap_overlap_ms=gaps.get("swap_overlap_ms", 0.0),
-                      pipeline_stalls=stalls)
+        self.fold_wait()
+        return True
+
+    def drain(self) -> None:
+        d = getattr(self.executor, "drain", None)
+        if d is not None:          # commit in-flight steps + background swaps
+            d()
+            self.fold_wait()
+
+    def result(self, tasks: List[Task]) -> LoopResult:
+        """LoopResult over ``tasks`` — the caller decides attribution: the
+        whole workload for the single-model loop, the tasks this instance
+        served for the fleet (each request exactly once fleet-wide)."""
+        gaps = {}
+        stalls = 0
+        if self.stats is not None:
+            end = self.stats.as_dict()
+            gaps = {k: end[k] - self.base[k] for k in
+                    ("schedule_ms", "dispatch_ms", "wait_ms",
+                     "swap_overlap_ms")}
+            stalls = int(end["stalls"] - self.base["stalls"])
+        return LoopResult(tasks=tasks, end_ms=self.now,
+                          decode_iterations=self.n_decode,
+                          prefills=self.n_prefill,
+                          prefill_chunks=self.n_chunks,
+                          suspends=self.n_suspend, resumes=self.n_resume,
+                          swapped_bytes=float(getattr(self.executor,
+                                                      "swapped_bytes", 0.0)),
+                          spec_extra_tokens=self.n_spec_extra,
+                          drafted_tokens=int(getattr(self.executor,
+                                                     "drafted_tokens", 0)),
+                          accepted_tokens=int(getattr(self.executor,
+                                                      "accepted_tokens", 0)),
+                          schedule_ms=gaps.get("schedule_ms", 0.0),
+                          dispatch_ms=gaps.get("dispatch_ms", 0.0),
+                          wait_ms=gaps.get("wait_ms", 0.0),
+                          swap_overlap_ms=gaps.get("swap_overlap_ms", 0.0),
+                          pipeline_stalls=stalls)
+
+
+def merge_results(per_instance: Dict[str, LoopResult]) -> LoopResult:
+    """Fold per-instance LoopResults into one fleet-wide result: counters
+    sum, the clock is the latest instance's (instances run concurrently),
+    and task lists concatenate — each request appears in exactly ONE
+    per-instance result (attributed to the instance that served it), so
+    the merge never double-counts a spill-routed request."""
+    results = list(per_instance.values())
+    if not results:
+        return LoopResult(tasks=[], end_ms=0.0, decode_iterations=0,
+                          prefills=0)
+    return LoopResult(
+        tasks=[t for r in results for t in r.tasks],
+        end_ms=max(r.end_ms for r in results),
+        decode_iterations=sum(r.decode_iterations for r in results),
+        prefills=sum(r.prefills for r in results),
+        prefill_chunks=sum(r.prefill_chunks for r in results),
+        suspends=sum(r.suspends for r in results),
+        resumes=sum(r.resumes for r in results),
+        swapped_bytes=sum(r.swapped_bytes for r in results),
+        spec_extra_tokens=sum(r.spec_extra_tokens for r in results),
+        drafted_tokens=sum(r.drafted_tokens for r in results),
+        accepted_tokens=sum(r.accepted_tokens for r in results),
+        schedule_ms=sum(r.schedule_ms for r in results),
+        dispatch_ms=sum(r.dispatch_ms for r in results),
+        wait_ms=sum(r.wait_ms for r in results),
+        swap_overlap_ms=sum(r.swap_overlap_ms for r in results),
+        pipeline_stalls=sum(r.pipeline_stalls for r in results))
+
+
+def run_serving_loop(scheduler: Scheduler, executor: Executor,
+                     workload: Sequence[Task], max_ms: float = 600_000.0,
+                     idle_gas: int = 10_000_000) -> LoopResult:
+    arrivals = sorted(workload, key=lambda t: (t.arrival_ms, t.task_id))
+    i = 0
+    drv = InstanceDriver(scheduler, executor)
+    gas = idle_gas
+
+    def deliver_arrivals(upto: float) -> None:
+        nonlocal i
+        while i < len(arrivals) and arrivals[i].arrival_ms <= upto:
+            drv.deliver(arrivals[i])
+            i += 1
+
+    deliver_arrivals(0.0)
+    while drv.now < max_ms:
+        gas -= 1
+        if gas <= 0:
+            raise RuntimeError("serving loop did not converge")
+        if not drv.step():
+            if i < len(arrivals):            # idle -> jump to next arrival
+                drv.now = max(drv.now, arrivals[i].arrival_ms)
+                deliver_arrivals(drv.now)
+                continue
+            break                            # drained
+        deliver_arrivals(drv.now)
+    drv.drain()
+    return drv.result(list(arrivals))

@@ -75,6 +75,18 @@ def summarize(tasks: Sequence[Task]) -> Dict[str, Attainment]:
     return out
 
 
+def per_tier(tasks: Sequence[Task]) -> Dict[str, Attainment]:
+    """Fleet routing (DESIGN.md §11): attainment per serving instance,
+    keyed by ``Task.served_by`` (spill-aware — a spilled request counts
+    under the instance that actually served its tokens, matching the
+    per-instance LoopResult partition). Requests no instance ever served
+    group under 'unrouted'."""
+    groups: Dict[str, List[Task]] = {}
+    for t in tasks:
+        groups.setdefault(t.served_by or "unrouted", []).append(t)
+    return {name: summarize(ts)["all"] for name, ts in sorted(groups.items())}
+
+
 def per_kind_tpot(tasks: Sequence[Task]) -> Dict[str, Dict[str, float]]:
     """Table II style: actual TPOT / rate / attainment per task kind."""
     kinds: Dict[str, List[Task]] = {}

@@ -1,0 +1,184 @@
+"""Fleet tier (DESIGN.md §11): routing unit tests, the spill accounting
+contract (admission counted once at the fleet layer, tokens attributed to
+the serving instance, no request in two per-instance LoopResults), and the
+degenerate single-instance fleet's byte-identity to run_serving_loop."""
+from repro.core.latency_model import paper_fig1_model
+from repro.core.schedulers import SliceScheduler
+from repro.core.selection import (InstanceView, PageBudget, route_request,
+                                  route_score)
+from repro.core.task import SLOSpec, Task, control_task, voice_task
+from repro.serving.executor import SimExecutor
+from repro.serving.fleet import (FleetInstance, FleetRouter, SimTier,
+                                 run_fleet_loop, sim_fleet)
+from repro.serving.loop import run_serving_loop
+
+LAT = paper_fig1_model()
+
+
+def _view(tier, rates=(), free_pages=None, budget=None, quality=1.0):
+    return InstanceView(tier=tier, lat=LAT, rates_desc=sorted(rates, reverse=True),
+                        free_pages=free_pages, page_budget=budget,
+                        quality=quality)
+
+
+def _task(tpot_ms=100.0, min_tier=0, **kw):
+    kw.setdefault("prompt_len", 64)
+    kw.setdefault("output_len", 12)
+    return Task(SLOSpec(tpot_ms=tpot_ms, ttft_ms=60_000.0), utility=1.0,
+                min_tier=min_tier, **kw)
+
+
+# ---------------------------------------------------------- routing units
+
+def test_route_prefers_qualifying_tier():
+    """A quality-tier request lands on a tier >= min_tier instance even
+    when a lower tier scores higher."""
+    views = [_view(0, quality=5.0), _view(1, quality=1.0)]
+    j, degraded = route_request(_task(min_tier=1), views)
+    assert (j, degraded) == (1, False)
+
+
+def test_route_quality_weighting():
+    """min_tier=0 requests go wherever quality-weighted utility per cost
+    is best — the large model when both tiers are otherwise equal."""
+    views = [_view(0, quality=0.5), _view(1, quality=1.0)]
+    j, degraded = route_request(_task(), views)
+    assert (j, degraded) == (1, False)
+
+
+def test_route_degraded_downtier_when_starved():
+    """When every qualifying tier is page-starved the request flows
+    DOWN-tier, flagged degraded, instead of deferring."""
+    pb = PageBudget(total_pages=100, page_size=16)
+    starved = _view(1, free_pages=0, budget=pb)
+    assert route_score(_task(), starved) is None
+    j, degraded = route_request(_task(min_tier=1), [_view(0), starved])
+    assert (j, degraded) == (0, True)
+
+
+def test_route_least_loaded_overflow():
+    """Every instance infeasible -> overflow to the least-loaded one."""
+    pb = PageBudget(total_pages=100, page_size=16)
+    views = [_view(0, rates=(10, 10), free_pages=0, budget=pb),
+             _view(1, rates=(10,), free_pages=0, budget=pb)]
+    j, degraded = route_request(_task(min_tier=1), views)
+    assert (j, degraded) == (1, False)
+    j, degraded = route_request(_task(min_tier=1),
+                                [views[0], _view(0, rates=(10,),
+                                                 free_pages=0, budget=pb)])
+    assert (j, degraded) == (1, True)
+
+
+def test_router_rejects_bad_fleets():
+    import pytest
+    with pytest.raises(ValueError):
+        FleetRouter([])
+    inst = FleetInstance(name="a", tier=0, scheduler=SliceScheduler(LAT),
+                         executor=SimExecutor(LAT), lat=LAT)
+    with pytest.raises(ValueError):
+        FleetRouter([inst, inst])
+
+
+# ----------------------------------- spill accounting (double-count rule)
+
+def _spill_fleet():
+    """Two tiers, the big one with pages for exactly ONE resident: a pair
+    of min_tier=1 requests at t=0 routes to the big tier (pages look free
+    at admission), the long-running first pins the pool for seconds while
+    the second queues page-deferred with zero progress, and a later
+    realtime arrival keeps the small tier's clock alive so it pulls the
+    queued request once the big tier is provably starved."""
+    router = sim_fleet(
+        [SimTier("small", 0, LAT, quality=0.5, pages=64),
+         SimTier("big", 1, LAT, quality=1.0, pages=17)],
+        total_pages=81, page_size=16)
+    # a: 64+200 tokens -> 17 pages (the whole big pool) at ~2 tok/cycle
+    a = _task(tpot_ms=500.0, min_tier=1, arrival_ms=0.0, output_len=200)
+    b = _task(tpot_ms=500.0, min_tier=1, arrival_ms=0.0)
+    c = control_task(arrival_ms=5000.0, prompt_len=32, output_len=8)
+    for i, t in enumerate((a, b, c)):
+        t.task_id = 50_001 + i
+    return router, [a, b, c]
+
+
+def test_forced_spill_attribution_and_no_double_count():
+    router, tasks = _spill_fleet()
+    res = run_fleet_loop(router, tasks)
+    assert all(t.finished for t in res.tasks), [t.task_id for t in res.tasks]
+    assert res.spills == 1 and res.degraded >= 1
+
+    # admission counted ONCE at the fleet layer, at the FIRST route: both
+    # quality requests admitted by "big", the spill moved tokens only
+    assert res.admissions == {"big": 2, "small": 1}
+    assert sum(res.admissions.values()) == len(tasks)
+
+    spilled = [t for t in res.tasks if t.routed_to != t.served_by]
+    assert len(spilled) == 1
+    s = spilled[0]
+    assert (s.routed_to, s.served_by, s.served_tier) == ("big", "small", 0)
+    assert not s.tier_met() and not s.slo_met()   # degraded: flows, no credit
+
+    # each request in exactly one per-instance LoopResult (the regression:
+    # a spill-routed request must never be counted by both instances)
+    ids = [t.task_id for r in res.per_instance.values() for t in r.tasks]
+    assert sorted(ids) == sorted(t.task_id for t in tasks)
+    assert {t.task_id for t in res.per_instance["small"].tasks} == \
+        {s.task_id, tasks[2].task_id}
+    assert {t.task_id for t in res.per_instance["big"].tasks} == \
+        {tasks[0].task_id}
+    assert sorted(t.task_id for t in res.merged.tasks) == \
+        sorted(t.task_id for t in tasks)
+
+    # tokens follow the server: every instance's decode work covers exactly
+    # the outputs of the tasks attributed to it
+    for name, r in res.per_instance.items():
+        assert r.decode_iterations >= max(
+            (t.output_len - 1 for t in r.tasks), default=0), name
+
+    # nothing leaks from either page pool once everything drains
+    for inst in router.instances:
+        assert inst.executor.used_pages == 0, inst.name
+
+
+def test_spill_disabled_leaves_queue_in_place():
+    router, tasks = _spill_fleet()
+    router.spill = False
+    res = run_fleet_loop(router, tasks)
+    assert res.spills == 0
+    assert all(t.routed_to == t.served_by for t in res.tasks)
+
+
+# ------------------------------ degenerate single-instance byte-identity
+
+def _mini_workload():
+    tasks = [control_task(arrival_ms=120.0 * k, prompt_len=48, output_len=8)
+             for k in range(3)]
+    tasks += [voice_task(arrival_ms=150.0 + 400.0 * k, prompt_len=64,
+                         output_len=16) for k in range(2)]
+    for i, t in enumerate(tasks):
+        t.task_id = 60_001 + i
+    return tasks
+
+
+def test_single_instance_fleet_matches_serving_loop():
+    """One-instance --fleet degenerates to the single-model path exactly:
+    same token timestamps, same iteration counts, same clock."""
+    ref = run_serving_loop(SliceScheduler(LAT), SimExecutor(LAT),
+                          _mini_workload())
+    assert all(t.finished for t in ref.tasks)   # reference loop drains
+
+    inst = FleetInstance(name="solo", tier=0, scheduler=SliceScheduler(LAT),
+                         executor=SimExecutor(LAT), lat=LAT)
+    res = run_fleet_loop(FleetRouter([inst]), _mini_workload())
+
+    by_id = {t.task_id: t for t in ref.tasks}
+    for t in res.tasks:
+        r = by_id[t.task_id]
+        assert t.token_times_ms == r.token_times_ms, t.task_id
+        assert t.dropped == r.dropped
+        assert (t.routed_to, t.served_by, t.served_tier) == ("solo", "solo", 0)
+    assert res.merged.end_ms == ref.end_ms
+    assert res.merged.decode_iterations == ref.decode_iterations
+    assert res.merged.prefills == ref.prefills
+    assert res.admissions == {"solo": len(ref.tasks)}
+    assert res.spills == 0 and res.degraded == 0

@@ -1,0 +1,77 @@
+"""Registry smoke: every arch in configs/registry.py constructs (full,
+reduced, and "-smoke" alias) and flows through the dry-run param_specs
+path — eval_shape'd parameter structs plus the sharding-rule PartitionSpec
+trees — without touching devices. Catches a registry entry whose config
+module drifts from the model/sharding code before the (much slower)
+per-arch dry-run subprocess tests do."""
+import types
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.registry import get_config, get_shape, list_archs
+from repro.launch.sharding import page_specs, param_specs
+from repro.launch.specs import param_specs_struct
+
+
+def fake_mesh(model: int, data: int = 1):
+    # SimpleNamespace stands in for a real Mesh: the sharding rules only
+    # read .shape / .axis_names (same idiom as test_sharding_rules.py)
+    return types.SimpleNamespace(shape={"data": data, "model": model},
+                                 axis_names=("data", "model"))
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_config_constructs(arch):
+    cfg = get_config(arch)
+    assert cfg.d_model > 0 and cfg.n_layers > 0
+    small = get_config(arch).reduced()
+    assert small.n_layers <= cfg.n_layers
+    # the "-smoke" alias is the reduced config under another name
+    assert get_config(arch + "-smoke") == small
+
+
+def test_unknown_arch_raises():
+    with pytest.raises(KeyError):
+        get_config("no-such-arch")
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_dryrun_param_specs_path(arch):
+    """The dry-run specs path at reduced size: the PartitionSpec tree from
+    the sharding rules must mirror init_params' structure leaf-for-leaf,
+    and every spec must have one axis entry per array dimension."""
+    cfg = get_config(arch).reduced()
+    structs = param_specs_struct(cfg)
+    for mways in (1, 4):
+        specs = param_specs(cfg, fake_mesh(mways), train=False)
+
+        def check(spec, struct):
+            assert isinstance(spec, P)
+            assert len(spec) <= struct.ndim
+            for ax in spec:
+                assert ax in (None, "data", "model")
+
+        # tree.map zips both trees: a structural mismatch raises here
+        jax.tree.map(check, specs, structs,
+                     is_leaf=lambda x: isinstance(x, P))
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_dryrun_page_specs_path(arch):
+    """KV page-arena specs: [L, n_pages, Hkv, page_size, hd] rank with the
+    head axis either model-sharded or replicated, never anything else."""
+    cfg = get_config(arch).reduced()
+    for mways in (1, 4):
+        spec = page_specs(cfg, fake_mesh(mways))
+        assert set(spec) == {"k_pages", "v_pages"}
+        for s in spec.values():
+            assert len(s) == 5
+            assert s[2] in (None, "model")
+
+
+def test_every_arch_has_every_shape():
+    # get_shape must resolve for the dry-run grid's shape names
+    for name in ("decode_32k",):
+        assert get_shape(name).seq_len > 0
