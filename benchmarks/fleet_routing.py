@@ -21,6 +21,9 @@ Engine checks (real paged JAX engines on CPU):
   - a two-instance fleet (smollm-360m + edge-6b, reduced) serves a mixed
     workload end to end: every request lands, ``pool.check()`` passes and
     zero pages remain held on BOTH engines;
+  - a mixed-cache-kind fleet (mamba2-780m recurrent-state realtime tier +
+    granite-MoE paged-KV quality tier, DESIGN.md §12) drains with tier
+    floors held, unique attribution, zero pages/state slots leaked;
   - degenerate single-instance fleet == run_serving_loop: the same
     all-arrivals-at-0 workload through both drivers gives identical
     scheduling decisions and byte-identical greedy token streams.
@@ -193,6 +196,48 @@ def _run_engine():
     assert n_inst == len(tasks), "per-instance partition lost requests"
     assert pages_leaked == 0, f"{pages_leaked} pages leaked"
 
+    # --- mixed-cache-kind fleet: SSM realtime tier + MoE quality tier ----
+    # (DESIGN.md §12) mamba2's O(1) recurrent state serves the tight
+    # realtime deadlines on tier 0 while granite-MoE holds the quality
+    # tier: routing, tier floors and drain must hold with HETEROGENEOUS
+    # cache kinds, and each request/byte is attributed exactly once.
+    hrouter = engine_fleet(["mamba2-780m", "granite-moe-3b-a800m"],
+                           n_pages=48, page_size=8, max_seq=96,
+                           max_batch=4, seed=0)
+    kinds = tuple(i.executor.store.kinds for i in hrouter.instances)
+    assert kinds == (("state",), ("kv",)), kinds
+    hscale = max(max(i.lat.decode_ms(2) for i in hrouter.instances) / 50.0,
+                 0.02)
+    htasks = []
+    for k in range(3):
+        htasks.append(control_task(arrival_ms=40.0 * k, prompt_len=10,
+                                   output_len=8))
+        q = qa_task(arrival_ms=70.0 * k, prompt_len=14, output_len=10)
+        q.min_tier = 1
+        htasks.append(q)
+    for t in htasks:                    # same structural relaxation as above
+        t.slo.tpot_ms *= hscale * 4
+        t.slo.ttft_ms *= max(hscale, 1.0)
+        if t.slo.deadline_ms:
+            t.slo = SLOSpec.realtime_deadline(
+                t.slo.deadline_ms * max(hscale, 1.0) * 4, t.output_len)
+    hres = run_fleet_loop(hrouter, htasks, max_ms=3e7)
+    h_unserved = sum(1 for t in hres.tasks
+                     if not t.finished and not t.dropped)
+    h_n_inst = sum(len(lr.tasks) for lr in hres.per_instance.values())
+    h_leaked = 0
+    for inst in hrouter.instances:
+        inst.executor.store.check()
+        h_leaked += inst.executor.store.leaked()
+    assert h_unserved == 0, f"{h_unserved} mixed-arch requests unserved"
+    assert h_n_inst == len(htasks), "mixed-arch partition lost requests"
+    assert h_leaked == 0, f"{h_leaked} pages/state slots leaked"
+    assert all(t.served_tier >= 1 for t in htasks if t.min_tier >= 1), \
+        "quality-tier request served below its tier floor"
+    hetero = {"unserved": h_unserved, "leaked": h_leaked,
+              "double_counted": h_n_inst - len(htasks),
+              "spills": hres.spills, "kinds": [list(k) for k in kinds]}
+
     # --- degenerate single-instance fleet == run_serving_loop ------------
     # Orca + all-arrivals-at-0: decisions are timing-independent, so the
     # comparison is exact even with measured wall-clock latencies
@@ -235,7 +280,7 @@ def _run_engine():
     return {"unserved": unserved, "pages_leaked": pages_leaked,
             "single_instance_equal": single_instance_equal,
             "admissions": dict(res.admissions), "spills": res.spills,
-            "degraded": res.degraded, "n": len(tasks)}
+            "degraded": res.degraded, "n": len(tasks), "hetero": hetero}
 
 
 def run(tiny: bool = False, engine: bool = False) -> None:
@@ -289,6 +334,10 @@ def run(tiny: bool = False, engine: bool = False) -> None:
         emit("fleet_routing/engine/unserved", payload["engine"]["unserved"])
         emit("fleet_routing/engine/single_instance_equal",
              payload["engine"]["single_instance_equal"])
+        emit("fleet_routing/engine/hetero_leaked",
+             payload["engine"]["hetero"]["leaked"])
+        emit("fleet_routing/engine/hetero_unserved",
+             payload["engine"]["hetero"]["unserved"])
     save_json("fleet_routing", payload)
 
 

@@ -1,0 +1,210 @@
+"""Heterogeneous-architecture serving benchmark (EXPERIMENTS.md
+§Hetero-serving): the architecture-generic cache store (DESIGN.md §12)
+serves dense-attention, pure-SSM, hybrid, and MoE registry configs through
+the SAME paged engine + SLICE loop, with every cache kind accounted.
+
+Per architecture (real reduced-config JAX engines on CPU):
+  - prefill + decode logits from the paged engine match the slot-cache
+    oracle (``JaxExecutor``) to < 1e-5 — paging/state plumbing adds no
+    numerics;
+  - suspend -> host swap -> resume round-trips the recurrent SSD state
+    BIT-exactly (the blob is an opaque snapshot; nothing recomputes it)
+    and post-resume decode still matches the oracle;
+  - a full ``run_serving_loop`` pass with ``SliceScheduler(kv_swap=True)``
+    over the engine's own measured latency model finishes every request
+    with zero pages AND zero state slots held (``CacheStore.leaked()``);
+  - the dense arch still carries no state arena (``states is None``,
+    pages == {k,v}): the attention-only path is structurally the PR-8 one.
+
+Fleet leg: a mixed-kind two-instance fleet (dense smollm-360m tier 0 +
+hybrid hymba-1.5b tier 1) routes a mixed workload end to end — every
+request served exactly once, both cache kinds drained on both engines.
+
+All gates are structural (equivalence flags, leak counts, arch counts),
+never wall-clock.
+
+  PYTHONPATH=src python -m benchmarks.hetero_serving [--tiny]
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, save_json
+
+# dense GQA / pure-SSM / hybrid (attention+SSD) / MoE — one per cache shape
+ARCHS = ("smollm-360m", "mamba2-780m", "hymba-1.5b", "granite-moe-3b-a800m")
+# CI smoke keeps one representative per *kind* mix: kv-only, kv+state, MoE
+TINY_ARCHS = ("smollm-360m", "hymba-1.5b", "granite-moe-3b-a800m")
+ATOL = 1e-5
+
+
+def _serve_arch(name: str, decode_steps: int):
+    """One architecture end to end; returns per-arch structural metrics."""
+    from repro.configs import get_config
+    from repro.core.schedulers import SliceScheduler
+    from repro.core.task import qa_task
+    from repro.serving.executor import JaxExecutor, PagedJaxExecutor
+    from repro.serving.loop import run_serving_loop
+
+    cfg = get_config(name).reduced()
+    ex = PagedJaxExecutor(cfg, n_pages=32, page_size=8, max_seq=64,
+                          max_batch=4, seed=0)
+    oracle = JaxExecutor(cfg, params=ex.params, max_slots=4, max_seq=64,
+                         seed=0)
+
+    # --- paged engine == slot oracle under paging + swap -----------------
+    tasks = [qa_task(arrival_ms=0.0, prompt_len=12 + 3 * i, output_len=8)
+             for i in range(3)]
+    err = 0.0
+    for t in tasks:
+        ex.prefill(t)
+        oracle.prefill(t)
+        err = max(err, float(np.max(np.abs(
+            ex.last_prefill_logits - oracle.last_prefill_logits))))
+    for _ in range(decode_steps):
+        ex.decode(tasks)
+        oracle.decode(tasks)
+        err = max(err, float(np.max(np.abs(ex.last_logits
+                                           - oracle.last_logits))))
+
+    # --- suspend/resume: recurrent state round-trips bit-exactly ---------
+    victim, others = tasks[1], [tasks[0], tasks[2]]
+    before = None
+    if ex.states is not None:
+        slot = ex.states.slot_of(victim.task_id)
+        before = (np.asarray(ex.pages["ssm_state"][:, slot]),
+                  np.asarray(ex.pages["conv_state"][:, slot]))
+    ex.suspend(victim)
+    ex.decode(others)
+    oracle.decode(others)
+    err = max(err, float(np.max(np.abs(ex.last_logits - oracle.last_logits))))
+    ex.resume(victim)
+    swap_exact = True
+    if before is not None:
+        slot = ex.states.slot_of(victim.task_id)
+        swap_exact = (
+            np.array_equal(before[0], np.asarray(ex.pages["ssm_state"][:, slot]))
+            and np.array_equal(before[1],
+                               np.asarray(ex.pages["conv_state"][:, slot])))
+    for _ in range(2):
+        ex.decode(tasks)
+        oracle.decode(tasks)
+        err = max(err, float(np.max(np.abs(ex.last_logits
+                                           - oracle.last_logits))))
+    for t in tasks:
+        ex.release(t)
+        oracle.release(t)
+
+    # --- full SLICE loop: Eq. 7 admission x paging x swap ----------------
+    lat = ex.latency_model()
+    loop_tasks = [qa_task(arrival_ms=5.0 * i, prompt_len=10 + 2 * i,
+                          output_len=6) for i in range(4)]
+    for t in loop_tasks:                # CPU wall-clock: keep SLOs inert
+        t.slo.tpot_ms = 1e5
+        t.slo.ttft_ms = 1e9
+    res = run_serving_loop(
+        SliceScheduler(lat, page_budget=ex.page_budget(), kv_swap=True),
+        ex, loop_tasks)
+    finished = sum(1 for t in res.tasks if t.finished)
+
+    ex.store.check()
+    dense_unchanged = True
+    if not cfg.has_ssm:
+        dense_unchanged = (ex.states is None
+                           and set(ex.pages) == {"k_pages", "v_pages"})
+    return {"kinds": list(ex.store.kinds),
+            "logits_max_err": err,
+            "equiv_ok": int(err < ATOL),
+            "swap_exact": int(swap_exact),
+            "finished": finished,
+            "served_ok": int(finished == len(loop_tasks)),
+            "leaked": ex.store.leaked(),
+            "pages_leaked": ex.pool.used_pages,
+            "states_leaked": (0 if ex.states is None
+                              else ex.states.used_slots),
+            "dense_unchanged": int(dense_unchanged)}
+
+
+def _run_fleet():
+    """Mixed-cache-kind fleet: dense tier 0 + hybrid tier 1, one router."""
+    from repro.core.task import SLOSpec, control_task, qa_task, voice_task
+    from repro.serving.fleet import engine_fleet, run_fleet_loop
+
+    router = engine_fleet(["smollm-360m", "hymba-1.5b"], n_pages=48,
+                          page_size=8, max_seq=96, max_batch=4, seed=0)
+    scale = max(max(i.lat.decode_ms(2) for i in router.instances) / 50.0,
+                0.02)
+    tasks = []
+    for k in range(3):
+        tasks.append(control_task(arrival_ms=40.0 * k, prompt_len=10,
+                                  output_len=8))
+        tasks.append(voice_task(arrival_ms=60.0 * k, prompt_len=12,
+                                output_len=10))
+        q = qa_task(arrival_ms=80.0 * k, prompt_len=14, output_len=10)
+        q.min_tier = 1
+        tasks.append(q)
+    for t in tasks:                     # same structural relaxation as the
+        t.slo.tpot_ms *= scale * 4      # fleet_routing engine check
+        t.slo.ttft_ms *= max(scale, 1.0)
+        if t.slo.deadline_ms:
+            t.slo = SLOSpec.realtime_deadline(
+                t.slo.deadline_ms * max(scale, 1.0) * 4, t.output_len)
+    res = run_fleet_loop(router, tasks, max_ms=3e7)
+    unserved = sum(1 for t in res.tasks if not t.finished and not t.dropped)
+    n_inst = sum(len(lr.tasks) for lr in res.per_instance.values())
+    pages_leaked = states_leaked = 0
+    for inst in router.instances:
+        inst.executor.store.check()
+        pages_leaked += inst.executor.pool.used_pages
+        if inst.executor.states is not None:
+            states_leaked += inst.executor.states.used_slots
+    assert unserved == 0, f"{unserved} requests never served"
+    assert n_inst == len(tasks), "per-instance partition lost requests"
+    assert pages_leaked == 0 and states_leaked == 0, \
+        (pages_leaked, states_leaked)
+    return {"unserved": unserved,
+            "double_counted": n_inst - len(tasks),
+            "pages_leaked": pages_leaked,
+            "states_leaked": states_leaked}
+
+
+def run(tiny: bool = False) -> None:
+    archs = TINY_ARCHS if tiny else ARCHS
+    decode_steps = 3 if tiny else 5
+    per_arch = {}
+    for name in archs:
+        per_arch[name] = _serve_arch(name, decode_steps)
+        emit(f"hetero_serving/{name}/logits_max_err",
+             per_arch[name]["logits_max_err"])
+        emit(f"hetero_serving/{name}/leaked", per_arch[name]["leaked"])
+    engine = {
+        "per_arch": per_arch,
+        "n_archs": len(per_arch),
+        "equiv_ok": min(a["equiv_ok"] for a in per_arch.values()),
+        "swap_exact": min(a["swap_exact"] for a in per_arch.values()),
+        "served_ok": min(a["served_ok"] for a in per_arch.values()),
+        "pages_leaked": sum(a["pages_leaked"] for a in per_arch.values()),
+        "states_leaked": sum(a["states_leaked"] for a in per_arch.values()),
+        "dense_unchanged": min(a["dense_unchanged"]
+                               for a in per_arch.values()),
+    }
+    fleet = _run_fleet()
+    for key in ("n_archs", "equiv_ok", "swap_exact", "served_ok",
+                "pages_leaked", "states_leaked"):
+        emit(f"hetero_serving/engine/{key}", engine[key])
+    emit("hetero_serving/fleet/unserved", fleet["unserved"])
+    emit("hetero_serving/fleet/double_counted", fleet["double_counted"])
+    payload = {"engine": engine, "fleet": fleet,
+               "config": {"archs": list(archs),
+                          "decode_steps": decode_steps, "atol": ATOL}}
+    save_json("hetero_serving", payload)
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke config: 3 archs, 3 decode steps")
+    args = ap.parse_args()
+    print("name,value,derived")
+    run(tiny=args.tiny)

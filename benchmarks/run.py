@@ -70,6 +70,19 @@ GATES = [
     ("fleet_routing", ("sim", "routing_beats_both"), "high", 0.0),
     ("fleet_routing", ("sim", "fleet", "pages_leaked"), "low", 0.0),
     ("fleet_routing", ("sim", "degenerate_equal"), "high", 0.0),
+    # gate 8: heterogeneous serving — structural only (DESIGN.md §12):
+    # dense/SSM-hybrid/MoE archs all match the slot oracle through the
+    # paged engine + SLICE loop, recurrent state swaps bit-exactly, and
+    # neither cache kind leaks anywhere (per-arch or in the mixed fleet)
+    ("hetero_serving", ("engine", "equiv_ok"), "high", 0.0),
+    ("hetero_serving", ("engine", "swap_exact"), "high", 0.0),
+    ("hetero_serving", ("engine", "served_ok"), "high", 0.0),
+    ("hetero_serving", ("engine", "dense_unchanged"), "high", 0.0),
+    ("hetero_serving", ("engine", "n_archs"), "high", 0.0),
+    ("hetero_serving", ("engine", "pages_leaked"), "low", 0.0),
+    ("hetero_serving", ("engine", "states_leaked"), "low", 0.0),
+    ("hetero_serving", ("fleet", "unserved"), "low", 0.0),
+    ("hetero_serving", ("fleet", "double_counted"), "low", 0.0),
 ]
 
 
@@ -143,7 +156,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig1,table2,fig7,fig10,"
                          "fig11,kv,prefill,prefix,swap,spec,sharded,async,"
-                         "fleet")
+                         "fleet,hetero")
     ap.add_argument("--tiny", action="store_true",
                     help="CI smoke configs for the benches that have one")
     ap.add_argument("--check", action="store_true",
@@ -160,10 +173,10 @@ def main() -> None:
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import (async_pipeline, dynamic_slo, fleet_routing,
-                            kv_pressure, kv_swap, latency_vs_batch,
-                            prefill_interference, prefix_sharing,
-                            ratio_sweep, sharded_serving, spec_decode,
-                            static_tpot, workload_sweep)
+                            hetero_serving, kv_pressure, kv_swap,
+                            latency_vs_batch, prefill_interference,
+                            prefix_sharing, ratio_sweep, sharded_serving,
+                            spec_decode, static_tpot, workload_sweep)
 
     print("name,value,derived")
     t0 = time.time()
@@ -194,6 +207,8 @@ def main() -> None:
         async_pipeline.run(tiny=args.tiny)
     if only is None or "fleet" in only:
         fleet_routing.run(tiny=args.tiny, engine=not args.skip_engine)
+    if only is None or "hetero" in only:
+        hetero_serving.run(tiny=args.tiny)
     print(f"total_wall_s,{time.time() - t0:.1f},", flush=True)
 
     ran = {"prefill_interference"} if only is None or "prefill" in only else set()
@@ -209,6 +224,8 @@ def main() -> None:
         ran.add("async_pipeline")
     if only is None or "fleet" in only:
         ran.add("fleet_routing")
+    if only is None or "hetero" in only:
+        ran.add("hetero_serving")
     if args.update_baselines:
         update_baselines(sorted(ran & set(_gated_benches())))
     if args.check:

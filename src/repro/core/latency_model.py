@@ -191,6 +191,53 @@ class RooflineLatencyModel(LatencyModel):
         return 1000.0 * max(comp_s, mem_s) + self.overhead_ms
 
 
+def moe_expert_factor(cfg) -> float:
+    """Activated-expert compute factor of a MoE arch vs. pricing its FFN
+    dense over ALL experts: attention/embedding cost is unchanged, the FFN
+    runs top_k of n_experts. Approximates the FLOP shares from the config's
+    parameter shapes (FFN params 3*D*F per expert vs 4*D^2 attention per
+    layer), clamped to [top_k/n_experts, 1]. Returns 1.0 for non-MoE archs
+    — safe to apply unconditionally when building a fleet."""
+    n_e = getattr(cfg, "n_experts", 0) or 0
+    top_k = getattr(cfg, "top_k", 0) or 0
+    if n_e <= 1 or top_k <= 0 or top_k >= n_e:
+        return 1.0
+    d, f = cfg.d_model, cfg.d_ff
+    ffn_all = 3.0 * d * f * n_e            # dense-over-all-experts pricing
+    other = 4.0 * d * d                    # qkv/out projections per layer
+    factor = (other + ffn_all * top_k / n_e) / (other + ffn_all)
+    return max(factor, top_k / n_e)
+
+
+class ExpertScaledLatencyModel(LatencyModel):
+    """Wrap any base l(b), scaling compute by a MoE arch's activated-expert
+    factor (DESIGN.md §12): grouped decode runs top_k experts per token, so
+    a curve calibrated for the dense-equivalent model over-prices the MoE
+    engine by ~1/factor. Used where no engine-measured curve exists —
+    analytical fleet tiers, routing views — a ``MeasuredLatencyModel``
+    probed on the live engine already embeds the real expert cost and
+    must NOT be wrapped (factor there would double-count)."""
+
+    def __init__(self, base: LatencyModel, factor: float):
+        if factor <= 0:
+            raise ValueError(f"factor must be positive, got {factor}")
+        self.base = base
+        self.factor = float(factor)
+        # swap pricing is bandwidth-bound, not expert-dependent
+        self.swap_bw_gbps = base.swap_bw_gbps
+        self.kv_bytes_per_token = base.kv_bytes_per_token
+        self.swap_overhead_ms = base.swap_overhead_ms
+        self.draft_ms_frac = base.draft_ms_frac
+        self.verify_token_frac = base.verify_token_frac
+        self.spec_accept_rate = base.spec_accept_rate
+
+    def decode_ms(self, batch: int) -> float:
+        return self.base.decode_ms(batch) * self.factor
+
+    def prefill_ms(self, prompt_len: int) -> float:
+        return self.base.prefill_ms(prompt_len) * self.factor
+
+
 def paper_fig1_model() -> MeasuredLatencyModel:
     """Calibration used by the reproduction benchmarks (paper Fig. 1 +
     Table II anchors, ChatGLM2-6B-INT4 / RTX 4060 Ti):

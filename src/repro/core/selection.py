@@ -89,6 +89,43 @@ class PageBudget:
         return sum(self.pages_for(t) for t in tasks) <= self.total_pages
 
 
+@dataclasses.dataclass(frozen=True)
+class StateBudget(PageBudget):
+    """``PageBudget`` joined by the recurrent-state slot constraint of
+    SSM/hybrid architectures (DESIGN.md §12): every resident task pins ONE
+    constant-size state slot (the per-layer ``[H, P, N]`` SSD state plus
+    conv tail) in addition to its KV pages, so admission must clear BOTH
+    headrooms — a mamba2 engine with free pages but no free slot is just
+    as full as one out of pages. Pure-SSM archs have zero-width KV pages
+    (``page_bytes == 0``); their page ledger still enforces seq_cap and
+    the pool arithmetic, so the page tests stay active unchanged.
+
+    ``state_bytes`` / ``page_bytes`` price the two kinds in device bytes
+    under one roof — ``bytes_for`` is the cross-kind footprint the router
+    and benchmarks report; slots and pages are NOT fungible at allocation
+    time, so ``fits``/selection check each kind's count separately."""
+    total_states: int = 0
+    state_bytes: int = 0               # bytes of one task's recurrent state
+    page_bytes: int = 0                # bytes of one KV page (all layers)
+    held_states: Optional[object] = None   # Callable[[Task], int]
+
+    def states_for(self, task: Task) -> int:
+        return 1 if self.total_states > 0 else 0
+
+    def held_states_for(self, task: Task) -> int:
+        return int(self.held_states(task)) if self.held_states else 0
+
+    def bytes_for(self, task: Task) -> int:
+        """Peak device bytes across both cache kinds."""
+        return (self.pages_for(task) * self.page_bytes
+                + self.states_for(task) * self.state_bytes)
+
+    def fits(self, tasks: Sequence[Task]) -> bool:
+        return (super().fits(tasks)
+                and sum(self.states_for(t) for t in tasks)
+                <= self.total_states)
+
+
 def task_selection(tasks: Sequence[Task], lat: LatencyModel,
                    budget_ms: float = PERIOD_BUDGET_MS,
                    page_budget: Optional[PageBudget] = None
@@ -106,6 +143,10 @@ def task_selection(tasks: Sequence[Task], lat: LatencyModel,
     (returned with the pool, admission continues — a smaller task further
     down the utility ordering may still fit), never dropped: memory pressure
     is transient, so the task re-enters selection at the next reschedule.
+    A ``StateBudget`` (SSM/hybrid engines, DESIGN.md §12) adds the same
+    reserve-or-defer treatment for recurrent-state slots; MoE decode cost
+    enters through ``lat`` itself — an engine-measured curve or an
+    ``ExpertScaledLatencyModel`` already prices the activated experts.
 
     With prefix sharing (budget.prefix_pages / free_pages_now, DESIGN.md §6)
     the pages of a shared prompt prefix are counted ONCE per selection
@@ -134,6 +175,13 @@ def task_selection(tasks: Sequence[Task], lat: LatencyModel,
         # for the pages they physically occupy.
         capacity = page_budget.total_pages
         pages_used = sum(page_budget.held_for(t) for t in pool)
+    # recurrent-state slots (StateBudget, DESIGN.md §12): same static
+    # arithmetic as pages — candidates' current slots committed up front,
+    # each admission upgrades held -> peak (one slot per task)
+    total_states = int(getattr(page_budget, "total_states", 0) or 0)
+    states_used = 0
+    if total_states:
+        states_used = sum(page_budget.held_states_for(t) for t in pool)
     for i, t in enumerate(pool):
         if page_budget is not None:
             if (page_budget.max_tasks is not None
@@ -150,6 +198,13 @@ def task_selection(tasks: Sequence[Task], lat: LatencyModel,
             if pages_used + need > capacity:
                 deferred.append(t)          # defer, keep scanning
                 continue
+            s_need = 0
+            if total_states:
+                s_need = (page_budget.states_for(t)
+                          - page_budget.held_states_for(t))
+                if states_used + s_need > total_states:
+                    deferred.append(t)      # slot-starved: defer likewise
+                    continue
         cand = rates + [quantized_rate(t.slo.tpot_ms)]
         cand.sort(reverse=True)  # sortTasksBySLORateDescending (Alg.2 line 11)
         if estimate_period_ms(cand, lat) >= budget_ms:
@@ -158,6 +213,7 @@ def task_selection(tasks: Sequence[Task], lat: LatencyModel,
         rates = cand
         if page_budget is not None:
             pages_used += need
+            states_used += s_need
             if key is not None:
                 prefixes_paid[key] = max(prefixes_paid.get(key, 0), kp)
     return selected, deferred
@@ -177,13 +233,17 @@ class InstanceView:
     is the instance's page headroom right now (None = unbounded / slot
     executor). ``quality`` scales realized utility by model tier, so a
     quality-weighted request prefers the large model when both tiers are
-    time-feasible."""
+    time-feasible. ``free_states`` is the instance's recurrent-state slot
+    headroom (StateBudget engines, DESIGN.md §12; None = no state kind) —
+    a slot-starved mamba2 tier must refuse routes exactly as a page-starved
+    dense tier does."""
     tier: int
     lat: LatencyModel
     rates_desc: List[int]
     free_pages: Optional[int] = None
     page_budget: Optional[PageBudget] = None
     quality: float = 1.0
+    free_states: Optional[int] = None
 
 
 def instance_cost_ms(task: Task, view: InstanceView) -> float:
@@ -211,6 +271,10 @@ def route_score(task: Task, view: InstanceView,
         return None
     if (view.free_pages is not None and view.page_budget is not None
             and view.page_budget.pages_for(task) > view.free_pages):
+        return None
+    if (view.free_states is not None and view.page_budget is not None
+            and getattr(view.page_budget, "states_for", None) is not None
+            and view.page_budget.states_for(task) > view.free_states):
         return None
     return view.quality * task.utility_rate / instance_cost_ms(task, view)
 

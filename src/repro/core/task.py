@@ -70,9 +70,12 @@ class Task:
     prefill_done_tokens: int = 0       # prompt tokens cached (chunked prefill)
     token_times_ms: list = dataclasses.field(default_factory=list)
     dropped: bool = False
-    # KV swapped to host (DESIGN.md §7): logical length preserved, device
-    # pages released; must be resumed before decoding again. The serving
-    # loop flips this after the executor's suspend/resume actually runs.
+    # Cache swapped to host (DESIGN.md §7, §12): logical length preserved,
+    # device residency released — KV pages for attention archs, the
+    # constant-size recurrent-state slot for SSM/hybrid archs, both for
+    # hybrids (one atomic stash; see serving/kv_swap.py). Must be resumed
+    # before decoding again. The serving loop flips this after the
+    # executor's suspend/resume actually runs.
     suspended: bool = False
 
     # dynamic utility (Algorithm 4 UtilityAdaptor may rescale)

@@ -1,0 +1,49 @@
+"""Pallas TPU kernel: grouped-expert gated FFN over a dispatched buffer.
+
+The host-side dispatch (``models/moe.py``) sorts token->expert assignments
+and scatters rows into a dense [E, C, D] buffer; this kernel runs the
+per-expert gated MLP  silu(x Wg) * (x Wu) @ Wd  with the grid over experts,
+so each grid cell is three dense MXU matmuls over that expert's capacity
+rows. Rows beyond an expert's real load are zero (scatter padding) and
+produce zero output — the gather-back drops them for free.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(buf_ref, wg_ref, wu_ref, wd_ref, out_ref):
+    x = buf_ref[0].astype(jnp.float32)                  # [C, D]
+    g = jax.lax.dot_general(x, wg_ref[0].astype(jnp.float32),
+                            (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [C, F]
+    u = jax.lax.dot_general(x, wu_ref[0].astype(jnp.float32),
+                            (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [C, F]
+    h = jax.nn.silu(g) * u
+    out = jax.lax.dot_general(h, wd_ref[0].astype(jnp.float32),
+                              (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # [C, D]
+    out_ref[0] = out.astype(out_ref.dtype)
+
+
+def moe_grouped_ffn_kernel(buf, wg, wu, wd, interpret: bool = False):
+    """buf: [E,C,D] dispatched rows; wg/wu: [E,D,F]; wd: [E,F,D].
+    Returns [E,C,D] per-expert gated-MLP outputs."""
+    E, C, D = buf.shape
+    F = wg.shape[-1]
+    return pl.pallas_call(
+        _kernel,
+        grid=(E,),
+        in_specs=[
+            pl.BlockSpec((1, C, D), lambda ee: (ee, 0, 0)),
+            pl.BlockSpec((1, D, F), lambda ee: (ee, 0, 0)),
+            pl.BlockSpec((1, D, F), lambda ee: (ee, 0, 0)),
+            pl.BlockSpec((1, F, D), lambda ee: (ee, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, C, D), lambda ee: (ee, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((E, C, D), buf.dtype),
+        interpret=interpret,
+    )(buf, wg, wu, wd)

@@ -14,7 +14,9 @@ import jax.numpy as jnp
 
 from repro.kernels import decode_attention as _da
 from repro.kernels import flash_prefill as _fp
+from repro.kernels import moe_dispatch as _moe
 from repro.kernels import paged_attention as _pa
+from repro.kernels import ssd_decode as _ssdd
 from repro.kernels import ssd_scan as _ssd
 
 
@@ -106,3 +108,22 @@ def ssd_scan(x, dt, a_log, b, c, d_skip, dt_bias, *, chunk: int = 64,
                                 chunk=chunk,
                                 interpret=_auto_interpret(interpret))
     return y[:, :T], h
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_decode_step(x, dt, a_log, b, c, d_skip, dt_bias, h, *,
+                    interpret: Optional[bool] = None):
+    """Single-token SSD recurrence: x [B,H,P], dt [B,H], b/c [B,N],
+    h [B,H,P,N] -> (y [B,H,P], h' [B,H,P,N] f32). Identical contraction
+    to ``models.ssm.ssd_step`` (the decode-side oracle)."""
+    return _ssdd.ssd_decode_step_kernel(x, dt, a_log, b, c, d_skip, dt_bias,
+                                        h, interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def moe_grouped_ffn(buf, wg, wu, wd, *, interpret: Optional[bool] = None):
+    """Per-expert gated FFN over a dispatched [E,C,D] buffer -> [E,C,D].
+    The dispatch/gather bracketing lives in ``models.moe`` — the kernel
+    only does the three dense matmuls per expert."""
+    return _moe.moe_grouped_ffn_kernel(buf, wg, wu, wd,
+                                       interpret=_auto_interpret(interpret))

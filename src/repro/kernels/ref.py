@@ -9,7 +9,7 @@ import jax.numpy as jnp
 from repro.models.layers import (attention, band_mask, decode_attention,
                                  paged_decode_attention,
                                  paged_verify_attention)
-from repro.models.ssm import ssd_chunked
+from repro.models.ssm import ssd_chunked, ssd_step
 
 
 def decode_attention_ref(q, k_cache, v_cache, kv_pos, q_pos, window=None):
@@ -54,6 +54,22 @@ def flash_prefill_chunk_ref(q, k, v, q_start, causal=True, window=None):
 def ssd_scan_ref(x, dt, a_log, b, c, d_skip, dt_bias, chunk: int = 64):
     """Same contract as kernels.ssd_scan.ssd_scan_kernel."""
     return ssd_chunked(x, dt, a_log, b, c, d_skip, dt_bias, chunk=chunk)
+
+
+def ssd_decode_step_ref(x, dt, a_log, b, c, d_skip, dt_bias, h):
+    """Same contract as kernels.ssd_decode.ssd_decode_step_kernel — the
+    single-token recurrence the model's decode path uses directly."""
+    return ssd_step(x, dt, a_log, b, c, d_skip, dt_bias, h)
+
+
+def moe_grouped_ffn_ref(buf, wg, wu, wd):
+    """Same contract as kernels.moe_dispatch.moe_grouped_ffn_kernel: the
+    per-expert gated MLP over the dispatched [E,C,D] buffer in plain jnp."""
+    import jax
+
+    h = jnp.einsum("ecd,edf->ecf", buf, wg)
+    h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", buf, wu)
+    return jnp.einsum("ecf,efd->ecd", h, wd)
 
 
 def ssd_scan_sequential_ref(x, dt, a_log, b, c, d_skip, dt_bias):

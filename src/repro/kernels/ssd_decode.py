@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: Mamba2 SSD single-token decode recurrence.
+
+One step of  h' = exp(dt A) h + dt B x,   y = C h' + D x  per (batch, head)
+grid cell — the decode-side companion of ``ssd_scan`` (which does chunked
+prefill). The whole [P, N] state update per head is one fused VMEM-resident
+outer product + reduction; no scan, no scratch carry. At chunk size C = 1
+the chunked dual form degenerates to exactly this recurrence, which the
+equivalence tests pin (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, dskip_ref, dtb_ref, x_ref, dt_ref, b_ref, c_ref, h_ref,
+            y_ref, hout_ref):
+    A = -jnp.exp(a_ref[0].astype(jnp.float32))          # scalar
+    dt = jax.nn.softplus(dt_ref[0, 0].astype(jnp.float32)
+                         + dtb_ref[0].astype(jnp.float32))   # scalar
+    g = jnp.exp(dt * A)                                 # scalar decay
+    x = x_ref[0, 0].astype(jnp.float32)                 # [P]
+    bv = b_ref[0].astype(jnp.float32)                   # [N]
+    cv = c_ref[0].astype(jnp.float32)                   # [N]
+    h = h_ref[0, 0].astype(jnp.float32)                 # [P, N]
+    h_new = h * g + (x * dt)[:, None] * bv[None, :]     # rank-1 update
+    y = jnp.sum(h_new * cv[None, :], axis=1)            # [P]
+    y = y + x * dskip_ref[0].astype(jnp.float32)
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+    hout_ref[0, 0] = h_new
+
+
+def ssd_decode_step_kernel(x, dt, a_log, b, c, d_skip, dt_bias, h,
+                           interpret: bool = False):
+    """x: [B,H,P]; dt: [B,H]; b,c: [B,N]; a_log/d_skip/dt_bias: [H];
+    h: [B,H,P,N]. Returns (y [B,H,P], h' [B,H,P,N] f32)."""
+    B, H, P = x.shape
+    N = b.shape[-1]
+    grid = (B, H)
+    y, hout = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda bb, hh: (hh,)),             # a_log
+            pl.BlockSpec((1,), lambda bb, hh: (hh,)),             # d_skip
+            pl.BlockSpec((1,), lambda bb, hh: (hh,)),             # dt_bias
+            pl.BlockSpec((1, 1, P), lambda bb, hh: (bb, hh, 0)),  # x
+            pl.BlockSpec((1, 1), lambda bb, hh: (bb, hh)),        # dt
+            pl.BlockSpec((1, N), lambda bb, hh: (bb, 0)),         # b
+            pl.BlockSpec((1, N), lambda bb, hh: (bb, 0)),         # c
+            pl.BlockSpec((1, 1, P, N), lambda bb, hh: (bb, hh, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, P), lambda bb, hh: (bb, hh, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda bb, hh: (bb, hh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        interpret=interpret,
+    )(a_log, d_skip, dt_bias, x, dt, b, c, h)
+    return y, hout

@@ -82,8 +82,9 @@ def _run_fleet(args):
                              "(DESIGN.md §4)")
         if args.prefill_chunk is not None and (not cfg.has_attention
                                                or cfg.has_ssm):
-            raise SystemExit(f"{arch}: chunked prefill needs a "
-                             "pure-attention arch (DESIGN.md §5)")
+            raise SystemExit(f"{arch}: executor-level chunked prefill needs "
+                             "a pure-attention arch — SSM/hybrid archs "
+                             "serve with atomic prefill (DESIGN.md §12)")
         draft_cfg = None
         if args.spec_decode and args.draft_config is not None:
             from repro.serving.spec_decode import draft_config_from_registry
@@ -276,8 +277,14 @@ def main():
         raise SystemExit("--prefill-chunk requires --scheduler slice "
                          "(Orca/FastServe are atomic-prefill baselines)")
     if args.prefill_chunk is not None and (not cfg.has_attention or cfg.has_ssm):
-        raise SystemExit(f"{args.arch}: chunked prefill needs a "
-                         "pure-attention arch (DESIGN.md §5)")
+        raise SystemExit(f"{args.arch}: executor-level chunked prefill needs "
+                         "a pure-attention arch — SSM/hybrid archs serve "
+                         "with atomic prefill (DESIGN.md §12)")
+    if cfg.has_ssm and args.executor == "paged" and (
+            args.spec_decode or args.prefix_cache or mesh_shape is not None):
+        raise SystemExit(f"{args.arch}: spec-decode/prefix-cache/mesh need "
+                         "rewindable/sharable per-token KV; the recurrent "
+                         "state kind has none (DESIGN.md §12)")
     if args.prefix_cache and args.executor != "paged":
         raise SystemExit("--prefix-cache requires --executor paged "
                          "(sharing rides on the refcounted page pool)")

@@ -116,14 +116,21 @@ def _ffn(cfg: ArchConfig, bp: Params, x: jnp.ndarray,
     zero = jnp.zeros((), jnp.float32)
     if cfg.block_kind == "moe":
         h = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
-        if moe_impl == "grouped" and h.ndim == 3 and h.shape[1] > 1:
-            fn = MOE.moe_ffn_grouped
+        mp = MOE.MoEParams(bp["moe"].router, bp["moe"].wg,
+                           bp["moe"].wu, bp["moe"].wd)
+        grouped = moe_impl in ("grouped", "grouped_kernel")
+        if grouped and h.ndim == 3 and h.shape[1] > 1:
+            y, aux = MOE.moe_ffn_grouped(mp, h, cfg.top_k)
+        elif grouped:
+            # decode (one token per row): lossless single-group dispatch —
+            # each expert only sees its routed rows instead of the dense
+            # oracle's all-experts-every-token sweep (DESIGN.md §12)
+            y, aux = MOE.moe_ffn_grouped_decode(
+                mp, h, cfg.top_k, use_kernel=moe_impl == "grouped_kernel")
         elif moe_impl == "dense":
-            fn = MOE.moe_ffn_dense
+            y, aux = MOE.moe_ffn_dense(mp, h, cfg.top_k)
         else:
-            fn = MOE.moe_ffn
-        y, aux = fn(MOE.MoEParams(bp["moe"].router, bp["moe"].wg,
-                                  bp["moe"].wu, bp["moe"].wd), h, cfg.top_k)
+            y, aux = MOE.moe_ffn(mp, h, cfg.top_k)
         return y, aux
     if cfg.d_ff > 0:
         h = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
@@ -311,47 +318,70 @@ def prefill_chunk(cfg: ArchConfig, params: Params, cache: Cache,
     causally masked). Returns (logits of the chunk's last position [B,V],
     new cache). Caller guarantees length+C <= buf_len (no ring wrap).
 
-    Restrictions: attention archs without SSM state (chunk-carry of the
-    recurrent state is not implemented), and exact logit-equivalence with
-    monolithic ``prefill`` holds for dense-FFN blocks (MoE capacity is
-    sequence-length dependent).
+    SSM and hybrid blocks thread the recurrent state through the chunked
+    dual form (DESIGN.md §12): each chunk consumes the cache's carried
+    ``ssm``/``conv`` state and emits the post-chunk state, so chaining
+    chunks is exactly identical to monolithic ``prefill`` (the equivalence
+    oracle in tests/test_kernels.py pins it). Exact logit-equivalence
+    holds for dense-FFN blocks (MoE capacity is sequence-length dependent).
     """
-    assert cfg.causal and cfg.has_attention and not cfg.has_ssm
+    assert cfg.causal and (cfg.has_attention or cfg.has_ssm)
     B, C = tokens.shape
     x = params["embed"][tokens]                    # [B,C,D]
     length = cache["length"]                       # [B]
     q_pos = length[:, None] + jnp.arange(C, dtype=length.dtype)  # [B,C]
-    buf_len = cache["k"].shape[3]
-    window = None
-    if cfg.sliding_window and buf_len <= cfg.sliding_window:
-        window = cfg.sliding_window
-    slot = q_pos                                   # append-only: no ring wrap
+    new_cache: Cache = {"length": length + C}
     barr = jnp.arange(B)[:, None]
-    new_kv_pos = cache["kv_pos"].at[barr, slot].set(q_pos)
-    new_cache: Cache = {"length": length + C, "kv_pos": new_kv_pos}
+    window = None
+    new_kv_pos = None
+    if cfg.has_attention:
+        buf_len = cache["k"].shape[3]
+        if cfg.sliding_window and buf_len <= cfg.sliding_window:
+            window = cfg.sliding_window
+        slot = q_pos                               # append-only: no ring wrap
+        new_kv_pos = cache["kv_pos"].at[barr, slot].set(q_pos)
+        new_cache["kv_pos"] = new_kv_pos
 
     def body(x, xs):
         bp, lc = xs
         h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
-        q = (h @ bp["wq"]).reshape(B, C, cfg.n_heads, cfg.head_dim)
-        k = (h @ bp["wk"]).reshape(B, C, cfg.n_kv_heads, cfg.head_dim)
-        v = (h @ bp["wv"]).reshape(B, C, cfg.n_kv_heads, cfg.head_dim)
-        q = shard(L.apply_rope(q, q_pos, cfg.rope_theta), ("b", None, "m", None))
-        k = L.apply_rope(k, q_pos, cfg.rope_theta)
-        kc = lc["k"].at[barr, :, slot].set(k)      # [B,Hkv,buf,hd]
-        vc = lc["v"].at[barr, :, slot].set(v)
-        if use_kernel:
-            from repro.kernels import ops as _kops
-            a = _kops.flash_prefill_chunk(q, kc.swapaxes(1, 2),
-                                          vc.swapaxes(1, 2), length,
-                                          window=window)
-        else:
-            a = L.chunk_decode_attention(q, kc, vc, new_kv_pos, q_pos, window)
-        x = x + a.reshape(B, C, cfg.q_dim) @ bp["wo"]
+        new_lc: Dict[str, Any] = {}
+        parts = []
+        if cfg.has_attention:
+            q = (h @ bp["wq"]).reshape(B, C, cfg.n_heads, cfg.head_dim)
+            k = (h @ bp["wk"]).reshape(B, C, cfg.n_kv_heads, cfg.head_dim)
+            v = (h @ bp["wv"]).reshape(B, C, cfg.n_kv_heads, cfg.head_dim)
+            q = shard(L.apply_rope(q, q_pos, cfg.rope_theta),
+                      ("b", None, "m", None))
+            k = L.apply_rope(k, q_pos, cfg.rope_theta)
+            kc = lc["k"].at[barr, :, slot].set(k)  # [B,Hkv,buf,hd]
+            vc = lc["v"].at[barr, :, slot].set(v)
+            if use_kernel:
+                from repro.kernels import ops as _kops
+                a = _kops.flash_prefill_chunk(q, kc.swapaxes(1, 2),
+                                              vc.swapaxes(1, 2), length,
+                                              window=window)
+            else:
+                a = L.chunk_decode_attention(q, kc, vc, new_kv_pos, q_pos,
+                                             window)
+            parts.append(a.reshape(B, C, cfg.q_dim) @ bp["wo"])
+            new_lc["k"], new_lc["v"] = kc, vc
+        if cfg.has_ssm:
+            sp = SSM.SSMParams(*[bp["ssm"][i] for i in range(len(bp["ssm"]))])
+            s_out, hS, cS = SSM.ssm_mixer_with_state(
+                sp, h, cfg.ssm_inner, cfg.ssm_state, cfg.ssm_head_dim,
+                use_kernel=use_kernel and not cfg.has_attention,
+                h0=lc["ssm"], conv0=lc["conv"])
+            parts.append(s_out)
+            new_lc["ssm"] = hS
+            new_lc["conv"] = cS.astype(lc["conv"].dtype)
+        mixer = parts[0] if len(parts) == 1 else 0.5 * (parts[0] + parts[1])
+        x = x + mixer
         f_out, _ = _ffn(cfg, bp, x, opts.moe_impl)
-        return x + f_out, {"k": kc, "v": vc}
+        return x + f_out, new_lc
 
-    layer_caches = {"k": cache["k"], "v": cache["v"]}
+    layer_caches = {k: cache[k] for k in ("k", "v", "ssm", "conv")
+                    if k in cache}
     x, new_layer_caches = jax.lax.scan(body, x, (params["blocks"], layer_caches),
                                        unroll=opts.unroll)
     new_cache.update(new_layer_caches)
@@ -565,34 +595,64 @@ def init_paged_cache(cfg: ArchConfig, n_pages: int, page_size: int,
                      dtype=jnp.float32) -> Cache:
     """Shared KV page arena: k/v_pages [L, n_pages, Hkv, page_size, hd].
     Page ownership lives in serving.kv_pool.KVPagePool; sequences address the
-    arena through per-step [B, max_pages] page tables (decode_step_paged)."""
-    assert cfg.has_attention, "paged KV cache needs attention layers"
-    assert not cfg.has_ssm, (
-        "SSM state is O(1) per sequence — nothing to page; use init_cache")
-    shape = (cfg.n_layers, n_pages, cfg.n_kv_heads, page_size, cfg.head_dim)
+    arena through per-step [B, max_pages] page tables (decode_step_paged).
+
+    Attention-free (pure SSM) archs get a zero-width arena (Hkv = hd = 0):
+    the page table stays the logical token-length ledger for every arch
+    (DESIGN.md §12) but the pages carry no bytes — their recurrent state
+    lives in the constant-size arena from ``init_state_arena``."""
+    assert cfg.has_attention or cfg.has_ssm, "arch has no decode cache"
+    hkv = cfg.n_kv_heads if cfg.has_attention else 0
+    hd = cfg.head_dim if cfg.has_attention else 0
+    shape = (cfg.n_layers, n_pages, hkv, page_size, hd)
     return {"k_pages": jnp.zeros(shape, dtype),
             "v_pages": jnp.zeros(shape, dtype)}
+
+
+def init_state_arena(cfg: ArchConfig, n_slots: int,
+                     dtype=jnp.float32) -> Cache:
+    """Constant-size recurrent-state arena (DESIGN.md §12): per layer one
+    [H, P, N] SSD state (f32 — the recurrence accumulates in f32) and one
+    [C, K-1] conv tail per slot. Slot ownership lives in
+    serving.state_store.SSMStateStore; the whole per-task state is a single
+    fixed-size "page", so suspend/resume snapshots one slot slice."""
+    assert cfg.has_ssm, "state arena needs SSM layers"
+    return {
+        "ssm_state": jnp.zeros((cfg.n_layers, n_slots, cfg.ssm_heads,
+                                cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+        "conv_state": jnp.zeros((cfg.n_layers, n_slots,
+                                 cfg.ssm_inner + 2 * cfg.ssm_state,
+                                 cfg.ssm_conv - 1), dtype),
+    }
 
 
 def decode_step_paged(cfg: ArchConfig, params: Params, pages: Cache,
                       page_table: jnp.ndarray, lengths: jnp.ndarray,
                       tokens: jnp.ndarray, active: Optional[jnp.ndarray] = None,
                       opts: ModelOptions = ModelOptions(),
-                      use_kernel: bool = False) -> Tuple[jnp.ndarray, Cache]:
+                      use_kernel: bool = False,
+                      state_slots: Optional[jnp.ndarray] = None
+                      ) -> Tuple[jnp.ndarray, Cache]:
     """One decode iteration over the paged KV arena (DESIGN.md §3
-    adaptation #2).
+    adaptation #2) with per-layer cache-kind dispatch (§12): attention
+    layers read/write the paged KV arena, SSM layers the constant-size
+    state arena, and hybrid blocks mix both kinds in the same step.
 
-    pages: init_paged_cache dict; page_table: [B, maxp] physical page per
-    logical page (-1 unused; row b must cover lengths[b]+1 tokens — the pool
+    pages: init_paged_cache dict (plus the init_state_arena entries for
+    SSM/hybrid archs); page_table: [B, maxp] physical page per logical
+    page (-1 unused; row b must cover lengths[b]+1 tokens — the pool
     extends BEFORE the step); lengths: [B] cached tokens per row (the new
     token is written at logical position lengths[b]); tokens: [B] int32;
     active: [B] bool — inactive rows write nothing (their scatter index is
-    out-of-bounds and dropped) and their logits are garbage to be ignored.
+    out-of-bounds and dropped) and their logits are garbage to be ignored;
+    state_slots: [B] state-arena slot per row (-1 pad rows), required for
+    SSM/hybrid archs.
 
-    Returns (logits [B,V], new pages). Lengths/page tables are host-side
-    pool state, not device state — the caller advances them.
+    Returns (logits [B,V], new pages). Lengths/page tables/slots are
+    host-side pool state, not device state — the caller advances them.
     """
-    assert cfg.causal and cfg.has_attention and not cfg.has_ssm
+    assert cfg.causal and (cfg.has_attention or cfg.has_ssm)
+    assert not cfg.has_ssm or state_slots is not None
     B = tokens.shape[0]
     if active is None:
         active = jnp.ones((B,), bool)
@@ -604,32 +664,63 @@ def decode_step_paged(cfg: ArchConfig, params: Params, pages: Cache,
     pt_row = page_table[jnp.arange(B), logical]    # phys page of the new token
     # out-of-bounds index => scatter dropped (inactive / untabled rows)
     phys = jnp.where(active & (pt_row >= 0), pt_row, n_pages)
+    if cfg.has_ssm:
+        n_slots = pages["ssm_state"].shape[1]
+        slot_rd = jnp.clip(state_slots, 0, n_slots - 1)  # pad rows read slot 0
+        slot_wr = jnp.where(active & (state_slots >= 0), state_slots, n_slots)
 
     def body(x, xs):
         bp, lc = xs
-        kp, vp = lc["k"], lc["v"]                  # [P,Hkv,psz,hd]
         h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
-        q = (h @ bp["wq"]).reshape(B, cfg.n_heads, cfg.head_dim)
-        k = (h @ bp["wk"]).reshape(B, cfg.n_kv_heads, cfg.head_dim)
-        v = (h @ bp["wv"]).reshape(B, cfg.n_kv_heads, cfg.head_dim)
-        q = shard(L.apply_rope(q[:, None], q_pos[:, None],
-                               cfg.rope_theta)[:, 0], ("b", "m", None))
-        k = L.apply_rope(k[:, None], q_pos[:, None], cfg.rope_theta)[:, 0]
-        kp = kp.at[phys, :, off].set(k, mode="drop")
-        vp = vp.at[phys, :, off].set(v, mode="drop")
-        if use_kernel:
-            from repro.kernels import ops as _kops
-            a = _kops.paged_decode_attention(q, kp, vp, page_table, q_pos)
+        new_lc: Dict[str, Any] = {}
+        parts = []
+        if cfg.has_attention:
+            kp, vp = lc["k"], lc["v"]              # [P,Hkv,psz,hd]
+            q = (h @ bp["wq"]).reshape(B, cfg.n_heads, cfg.head_dim)
+            k = (h @ bp["wk"]).reshape(B, cfg.n_kv_heads, cfg.head_dim)
+            v = (h @ bp["wv"]).reshape(B, cfg.n_kv_heads, cfg.head_dim)
+            q = shard(L.apply_rope(q[:, None], q_pos[:, None],
+                                   cfg.rope_theta)[:, 0], ("b", "m", None))
+            k = L.apply_rope(k[:, None], q_pos[:, None], cfg.rope_theta)[:, 0]
+            kp = kp.at[phys, :, off].set(k, mode="drop")
+            vp = vp.at[phys, :, off].set(v, mode="drop")
+            if use_kernel:
+                from repro.kernels import ops as _kops
+                a = _kops.paged_decode_attention(q, kp, vp, page_table, q_pos)
+            else:
+                a = L.paged_decode_attention(q, kp, vp, page_table, q_pos)
+            parts.append(a.reshape(B, cfg.q_dim) @ bp["wo"])
+            new_lc["k"], new_lc["v"] = kp, vp
         else:
-            a = L.paged_decode_attention(q, kp, vp, page_table, q_pos)
-        x = x + a.reshape(B, cfg.q_dim) @ bp["wo"]
+            new_lc["k"], new_lc["v"] = lc["k"], lc["v"]  # zero-width arena
+        if cfg.has_ssm:
+            sp = SSM.SSMParams(*[bp["ssm"][i] for i in range(len(bp["ssm"]))])
+            hS = lc["s"][slot_rd]                  # [B,H,P,N]
+            cS = lc["c"][slot_rd]                  # [B,C,K-1]
+            s_out, hS2, cS2 = SSM.ssm_mixer_step(
+                sp, h, cfg.ssm_inner, cfg.ssm_state, cfg.ssm_head_dim,
+                hS, cS)
+            parts.append(s_out)
+            # inactive/pad rows scatter out of bounds and are dropped
+            new_lc["s"] = lc["s"].at[slot_wr].set(hS2, mode="drop")
+            new_lc["c"] = lc["c"].at[slot_wr].set(
+                cS2.astype(lc["c"].dtype), mode="drop")
+        mixer = parts[0] if len(parts) == 1 else 0.5 * (parts[0] + parts[1])
+        x = x + mixer
         f_out, _ = _ffn(cfg, bp, x, "dense" if cfg.block_kind != "moe"
                         else opts.moe_impl)
-        return x + f_out, {"k": kp, "v": vp}
+        return x + f_out, new_lc
 
     layer_pages = {"k": pages["k_pages"], "v": pages["v_pages"]}
+    if cfg.has_ssm:
+        layer_pages["s"] = pages["ssm_state"]
+        layer_pages["c"] = pages["conv_state"]
     x, new_layer_pages = jax.lax.scan(body, x, (params["blocks"], layer_pages),
                                       unroll=opts.unroll)
     logits = unembed(cfg, params, x)
-    return logits, {"k_pages": new_layer_pages["k"],
-                    "v_pages": new_layer_pages["v"]}
+    new_pages = {"k_pages": new_layer_pages["k"],
+                 "v_pages": new_layer_pages["v"]}
+    if cfg.has_ssm:
+        new_pages["ssm_state"] = new_layer_pages["s"]
+        new_pages["conv_state"] = new_layer_pages["c"]
+    return logits, new_pages

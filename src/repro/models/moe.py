@@ -142,6 +142,50 @@ def moe_ffn_grouped(p: MoEParams, x: jnp.ndarray, top_k: int,
     return y, aux
 
 
+def moe_ffn_grouped_decode(p: MoEParams, x: jnp.ndarray, top_k: int,
+                           use_kernel: bool = False
+                           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Decode-step grouped dispatch: x is ONE token per row ([B,D] or
+    [B,1,D]), so the whole batch forms a single dispatch group with
+    capacity C = B*K — every assignment fits, no capacity drops, and the
+    output is bit-for-bit a reordering of the dense oracle's expert sums.
+
+    This is what makes MoE decode affordable in the serving loop: the
+    dense oracle runs all E experts over every token (E/K wasted FLOPs —
+    granite-MoE activates 8 of 40), while the grouped buffer only feeds
+    each expert the rows routed to it. With ``use_kernel`` the per-expert
+    gated FFN over the [E,C,D] buffer runs through the Pallas
+    grouped-expert kernel (``kernels/moe_dispatch.py``).
+    """
+    orig_shape = x.shape
+    D = orig_shape[-1]
+    x2 = x.reshape(-1, D)
+    B = x2.shape[0]
+    E = p.router.shape[-1]
+    K = top_k
+    w, ids, aux = route(p.router, x2, K)
+    BK = B * K
+    e_flat = ids.reshape(BK)
+    order = jnp.argsort(e_flat)                          # stable
+    es = e_flat[order]
+    ts = order // K
+    ws = w.reshape(BK)[order]
+    seg_start = jnp.searchsorted(es, jnp.arange(E))
+    pos = jnp.arange(BK) - seg_start[es]
+    C = BK                                               # lossless capacity
+    buf = jnp.zeros((E, C, D), x2.dtype).at[es, pos].set(x2[ts])
+    if use_kernel:
+        from repro.kernels import ops as kops
+        out = kops.moe_grouped_ffn(buf, p.wg, p.wu, p.wd)
+    else:
+        h = jnp.einsum("ecd,edf->ecf", buf, p.wg)
+        h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", buf, p.wu)
+        out = jnp.einsum("ecf,efd->ecd", h, p.wd)
+    y_assign = out[es, pos]                              # [BK, D]
+    y = jnp.zeros((B, D), x2.dtype).at[ts].add(y_assign * ws[:, None])
+    return y.reshape(orig_shape), aux
+
+
 def moe_ffn_dense(p: MoEParams, x: jnp.ndarray, top_k: int
                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Oracle: compute every expert for every token, combine top-k weights.

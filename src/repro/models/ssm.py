@@ -171,28 +171,49 @@ def ssm_mixer(p: SSMParams, x: jnp.ndarray, d_inner: int, n_state: int,
 
 def ssm_mixer_with_state(p: SSMParams, x: jnp.ndarray, d_inner: int,
                          n_state: int, head_dim: int, chunk: int = 64,
-                         use_kernel: bool = False):
-    """Returns (y, final_ssm_state [B,H,P,N], final_conv_state [B,C,K-1])."""
+                         use_kernel: bool = False,
+                         h0: Optional[jnp.ndarray] = None,
+                         conv0: Optional[jnp.ndarray] = None):
+    """Returns (y, final_ssm_state [B,H,P,N], final_conv_state [B,C,K-1]).
+
+    ``h0``/``conv0`` carry incoming recurrent state across prefill chunks
+    (DESIGN.md §12): ``conv0`` is the [B,C,K-1] raw-input conv tail from
+    the previous chunk (zeros for the first chunk), ``h0`` the [B,H,P,N]
+    SSD state entering this chunk. Chaining chunks this way is exactly
+    identical to one full-sequence call — the equivalence oracle in
+    tests/test_kernels.py pins it.
+    """
     B, T, D = x.shape
     H = d_inner // head_dim
     K = p.conv_w.shape[-1]
     zxbcdt = x @ p.in_proj
     z, xbc, dt = _split_proj(p, zxbcdt, d_inner, n_state)
-    xbc_conv = causal_conv(xbc, p.conv_w, p.conv_b)
+    if conv0 is not None:
+        # prepend the carried raw-input tail, convolve, drop the warm-up
+        # rows: position 0 of this chunk then sees the same K-1 history
+        # it would inside one unchunked call
+        xbc_ext = jnp.concatenate([conv0.swapaxes(1, 2), xbc], axis=1)
+        xbc_conv = causal_conv(xbc_ext, p.conv_w, p.conv_b)[:, K - 1:]
+    else:
+        xbc_ext = xbc
+        xbc_conv = causal_conv(xbc, p.conv_w, p.conv_b)
     xs, b, c = jnp.split(xbc_conv, [d_inner, d_inner + n_state], axis=-1)
     xh = shard(xs.reshape(B, T, H, head_dim), ("b", None, "m", None))
-    if use_kernel:
+    if use_kernel and h0 is None:
         from repro.kernels import ops as kops
         y, h_last = kops.ssd_scan(xh, dt, p.a_log, b, c, p.d_skip, p.dt_bias,
                                   chunk=chunk)
     else:
+        # the Pallas kernel has no h0 input; carried-state chunks take the
+        # jnp dual form (identical contraction, see kernels/ref.py)
         y, h_last = ssd_chunked(xh, dt, p.a_log, b, c, p.d_skip, p.dt_bias,
-                                chunk=chunk)
+                                chunk=chunk, h0=h0)
     y = y.reshape(B, T, d_inner)
     y = rms_norm(y * jax.nn.silu(z), p.norm_w)
-    # conv state = last K-1 raw xbc inputs
-    pad = max(K - 1 - T, 0)
-    tail = jnp.pad(xbc, ((0, 0), (pad, 0), (0, 0)))[:, -(K - 1):]
+    # conv state = last K-1 raw (pre-conv) xbc inputs, including any
+    # carried history when this chunk is shorter than the conv window
+    pad = max(K - 1 - xbc_ext.shape[1], 0)
+    tail = jnp.pad(xbc_ext, ((0, 0), (pad, 0), (0, 0)))[:, -(K - 1):]
     conv_state = tail.swapaxes(1, 2)                           # [B,C,K-1]
     return y @ p.out_proj, h_last, conv_state
 

@@ -62,10 +62,12 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.latency_model import LatencyModel, MeasuredLatencyModel
-from repro.core.selection import PageBudget
+from repro.core.selection import PageBudget, StateBudget
 from repro.core.task import Task
 from repro.serving.kv_pool import KVPagePool, OutOfPages
 from repro.serving.kv_swap import HostArenaFull, KVSwapArena
+from repro.serving.state_store import (CacheStore, OutOfStates,
+                                       SSMStateStore)
 from repro.serving.pipeline import (DispatchQueue, GapStats, PendingStep,
                                     TransferLedger)
 
@@ -603,8 +605,19 @@ class PagedJaxExecutor(Executor):
     through the same device_get/put path. Logits match the single-device
     engine to < 1e-5 (tests/test_sharded.py).
 
-    Restrictions: attention-only archs (SSM state is O(1)/task — nothing to
-    page), and sequences are hard-capped at max_seq (the paged cache is
+    Cache kinds (DESIGN.md §12): attention layers grow paged KV; SSM layers
+    (mamba2, hymba's mamba half) carry ONE constant-size recurrent-state
+    slot per task — ``[H, P, N]`` SSD state + conv tail per layer — in a
+    ``SSMStateStore``-managed arena that rides the same ``self.pages`` dict,
+    so one AOT decode step mixes both kinds for hybrid archs. The KV pool
+    stays the logical token-length ledger for EVERY arch (pure-SSM archs
+    get zero-width k/v pages), which is what keeps admission, swap, and the
+    serving loop arch-generic. Because recurrent state is a running summary
+    rather than a per-token log, features that rewind/share/shard per-token
+    KV (spec decode, prefix cache, executor-level chunked prefill, mesh)
+    raise for SSM/hybrid archs — deviations listed in DESIGN.md §12.
+
+    Restrictions: sequences are hard-capped at max_seq (the paged cache is
     append-only; it never ring-wraps like the slot path's long-context mode).
     Mesh mode shards the jnp paged-attention path through GSPMD; the Pallas
     kernel would need a shard_map wrapper, so mesh + use_paged_kernel raises.
@@ -620,13 +633,27 @@ class PagedJaxExecutor(Executor):
                  spec_decode: bool = False, draft_cfg=None,
                  draft_params=None, max_spec_depth: int = 4,
                  mesh=None, async_dispatch: bool = False,
-                 max_in_flight: int = 2):
+                 max_in_flight: int = 2,
+                 n_state_slots: Optional[int] = None):
         import jax
         import jax.numpy as jnp
         from repro.models import model as M
-        if not cfg.has_attention or cfg.has_ssm:
-            raise ValueError("PagedJaxExecutor needs a pure-attention arch "
-                             "(SSM state is unpaged); use JaxExecutor")
+        if not (cfg.has_attention or cfg.has_ssm):
+            raise ValueError("PagedJaxExecutor needs an attention and/or "
+                             "SSM mixer; use JaxExecutor")
+        if cfg.has_ssm:
+            gated = [name for name, on in (
+                ("spec_decode", spec_decode),
+                ("prefix_cache", prefix_cache),
+                ("prefill_chunk_size", prefill_chunk_size is not None),
+                ("mesh", mesh is not None)) if on]
+            if gated:
+                raise ValueError(
+                    f"{'/'.join(gated)} unsupported for SSM/hybrid archs: "
+                    "recurrent state is a running summary, not a per-token "
+                    "log — it cannot be rewound, prefix-shared, chunk-"
+                    "restarted at the executor level, or sharded "
+                    "(DESIGN.md §12)")
         # Sliding-window archs are safe WITHOUT a window mask here: the slot
         # engine only applies the window when buf_len <= window, and this
         # engine hard-caps sequences at max_seq, so q_pos - pos < max_seq <=
@@ -657,6 +684,19 @@ class PagedJaxExecutor(Executor):
                 self.pool, max_pages=prefix_cache_pages or n_pages)
         self.max_pages_per_seq = -(-max_seq // page_size)
         self.pages = M.init_paged_cache(cfg, n_pages, page_size)
+        # Cache-kind subsystem (DESIGN.md §12): SSM/hybrid archs add a
+        # constant-size recurrent-state arena — slot-allocated by the
+        # SSMStateStore exactly as the pool allocates pages — merged into
+        # self.pages so AOT lowering/donation/async chaining carry it with
+        # zero extra plumbing. CacheStore is the cross-kind audit facade.
+        self.states = None
+        self.n_state_slots = 0
+        if cfg.has_ssm:
+            self.n_state_slots = (n_state_slots if n_state_slots is not None
+                                  else 2 * max_batch)
+            self.states = SSMStateStore(self.n_state_slots)
+            self.pages.update(M.init_state_arena(cfg, self.n_state_slots))
+        self.store = CacheStore(cfg, self.pool, self.states)
         # Tensor-parallel mode (DESIGN.md §9): shard params/pages over the
         # mesh BEFORE any step is lowered — AOT input shardings are taken
         # from the example arrays, so the canonical layout must be pinned
@@ -980,15 +1020,19 @@ class PagedJaxExecutor(Executor):
         jnp, M = self.jnp, self.M
         cfg, maxp = self.cfg, self.max_pages_per_seq
 
-        def step(params, pages, pt, lengths, tokens, active):
+        def step(params, pages, pt, lengths, tokens, active, *slots):
             # fused argmax + next-lengths: one compiled call yields the
             # next-token vector AND next cycle's length vector, so the
             # async chain feeds both straight back in (DESIGN.md §10) —
             # no second dispatch, no host round-trips, and commits copy
-            # b ints instead of materializing [b, vocab] logits
+            # b ints instead of materializing [b, vocab] logits.
+            # SSM/hybrid archs thread a per-row state-slot vector (*slots
+            # empty for dense archs — their trace is byte-identical to the
+            # pre-cache-kind engine, DESIGN.md §12)
+            kw = {"state_slots": slots[0]} if slots else {}
             logits, pages = M.decode_step_paged(
                 cfg, params, pages, pt, lengths, tokens, active,
-                use_kernel=self.use_paged_kernel)
+                use_kernel=self.use_paged_kernel, **kw)
             return (logits, jnp.argmax(logits, -1).astype(jnp.int32),
                     lengths + active.astype(jnp.int32), pages)
 
@@ -997,8 +1041,10 @@ class PagedJaxExecutor(Executor):
             ln = self._dev_in(jnp.zeros((b,), jnp.int32))
             tk = self._dev_in(jnp.zeros((b,), jnp.int32))
             av = self._dev_in(jnp.zeros((b,), bool))
+            extra = ((self._dev_in(jnp.full((b,), -1, jnp.int32)),)
+                     if cfg.has_ssm else ())
             self._step_jit[b] = self._lower(
-                step, (self.params, self.pages, pt, ln, tk, av),
+                step, (self.params, self.pages, pt, ln, tk, av) + extra,
                 pages_out=True, extra_repl=2)
 
     # -- chunked prefill (DESIGN.md §5): one compiled step per chunk-size
@@ -1306,12 +1352,23 @@ class PagedJaxExecutor(Executor):
                         t.prefix_group, kp * psz), touch=False)
                     kp = min(kp, matched // psz)
                 return ("prefix", t.prefix_group), kp
-        return PageBudget(
+        kw = dict(
             total_pages=self.n_pages, page_size=self.page_size,
             prompt_cap=self.max_seq // 2, seq_cap=self.max_seq,
             max_tasks=self.max_batch,
             held_pages=lambda t: self.pool.resident_page_count(t.task_id),
             free_pages_now=free_pages_now, prefix_pages=prefix_pages)
+        if self.states is None:
+            return PageBudget(**kw)
+        # SSM/hybrid archs: admission additionally reserves one constant-
+        # size recurrent-state slot per task, under the same headroom
+        # arithmetic as pages (DESIGN.md §12)
+        return StateBudget(
+            total_states=self.n_state_slots,
+            state_bytes=self.store.state_bytes,
+            page_bytes=self.store.page_bytes,
+            held_states=lambda t: self.states.resident_slot_count(t.task_id),
+            **kw)
 
     # -- ops --
     def prefill(self, task: Task) -> float:
@@ -1334,6 +1391,15 @@ class PagedJaxExecutor(Executor):
             return ms
         phys = self._reserve(
             lambda: self.pool.alloc(tid, L))         # OutOfPages -> caller
+        slot = -1
+        if self.states is not None:
+            try:
+                slot = self.states.alloc(tid)
+            except OutOfStates:
+                # OutOfStates is state-unchanged; undo the page reservation
+                # so the deferred task re-enters prefill cleanly
+                self.pool.free(tid)
+                raise
         toks = self._dev_in(jnp.asarray(toks_np, jnp.int32))
         key = (L,)
         if key not in self._prefill_jit:
@@ -1358,12 +1424,25 @@ class PagedJaxExecutor(Executor):
         n_alloc, psz = len(phys), self.page_size
         span = n_alloc * psz
         idx = jnp.asarray(phys, jnp.int32)
-        for name, src in (("k_pages", cache1["k"]), ("v_pages", cache1["v"])):
-            # [L,1,Hkv,max_seq,hd] -> [L,n_alloc,Hkv,psz,hd]
-            view = (src[:, 0, :, :span, :]
-                    .reshape(src.shape[0], src.shape[2], n_alloc, psz, -1)
-                    .swapaxes(1, 2))
-            self.pages[name] = self.pages[name].at[:, idx].set(view)
+        if self.cfg.has_attention:
+            for name, src in (("k_pages", cache1["k"]),
+                              ("v_pages", cache1["v"])):
+                # [L,1,Hkv,max_seq,hd] -> [L,n_alloc,Hkv,psz,hd]
+                view = (src[:, 0, :, :span, :]
+                        .reshape(src.shape[0], src.shape[2], n_alloc, psz, -1)
+                        .swapaxes(1, 2))
+                self.pages[name] = self.pages[name].at[:, idx].set(view)
+        if self.states is not None:
+            # splice the prefill's final recurrent state into the task's
+            # slot — the whole per-task state is one fixed-size "page"
+            self.pages["ssm_state"] = (
+                self.pages["ssm_state"].at[:, slot].set(
+                    cache1["ssm"][:, 0].astype(
+                        self.pages["ssm_state"].dtype)))
+            self.pages["conv_state"] = (
+                self.pages["conv_state"].at[:, slot].set(
+                    cache1["conv"][:, 0].astype(
+                        self.pages["conv_state"].dtype)))
         self._canonicalize_pages()
         if async_on:
             t1 = time.perf_counter()
@@ -1494,6 +1573,12 @@ class PagedJaxExecutor(Executor):
         ln[: len(ids)] = lengths
         av = np.zeros((b,), bool)
         av[: len(ids)] = True
+        sl = None
+        if self.states is not None:
+            # per-row recurrent-state slots; pad rows carry -1 (the step's
+            # write mask drops them, the clipped read is inert)
+            sl = np.full((b,), -1, np.int32)
+            sl[: len(ids)] = [self.states.slot_of(i) for i in ids]
         if self._async_on():
             # dispatch-ahead: the input token vector chains on-device off
             # the in-flight argmax — no host round-trip — and the step's
@@ -1512,12 +1597,14 @@ class PagedJaxExecutor(Executor):
                     tk_np[: len(ids)] = [self._last_tok[i] for i in ids]
                     tk_dev = tk_np
             key = (tuple(ids), b)
+            extra = (() if sl is None
+                     else (self._cached_in("sl", key, sl),))
             logits, am, ln_next, self.pages = self._step_jit[b](
                 self.params, self.pages,
                 self._cached_in("pt", key, pt),
                 self._cached_in("ln", key, ln),
                 self._dev_in(tk_dev),
-                self._cached_in("av", key, av))
+                self._cached_in("av", key, av), *extra)
             # chain next cycle's lengths off the fused output: every
             # active row grew by exactly one token, which is also what
             # pool.length will report when the next decode builds ln
@@ -1536,9 +1623,10 @@ class PagedJaxExecutor(Executor):
         tk = np.zeros((b,), np.int32)
         tk[: len(ids)] = [self._last_tok[i] for i in ids]
         t0 = time.perf_counter()
+        extra = () if sl is None else (self._dev_in(sl),)
         logits, am, _, self.pages = self._step_jit[b](
             self.params, self.pages, self._dev_in(pt), self._dev_in(ln),
-            self._dev_in(tk), self._dev_in(av))
+            self._dev_in(tk), self._dev_in(av), *extra)
         am.block_until_ready()
         ms = (time.perf_counter() - t0) * 1000.0
         # logits stay device-resident until someone reads last_logits —
@@ -1755,18 +1843,42 @@ class PagedJaxExecutor(Executor):
                 v_host = jax.device_get(v_slab)
                 entries = [(li, {"k": k_host[:, i], "v": v_host[:, i]})
                            for i, (li, _) in enumerate(released)]
+        # the recurrent-state kind swaps as ONE fixed-size blob, stashed at
+        # the sentinel logical index -1 — always below real page indices,
+        # so the arena's ascending-index audit holds unchanged
+        s_slab = c_slab = None
+        stashed = entries
+        if (self.states is not None and self.states.holds(tid)
+                and not self.states.is_swapped(tid)):
+            slot = self.states.slot_of(tid)
+            # functional snapshots, same reasoning as the page slabs above
+            s_slab = self.pages["ssm_state"][:, slot]
+            c_slab = self.pages["conv_state"][:, slot]
+            self.states.swap_out(tid)
+            if async_on:
+                blob = {"ssm": s_slab, "conv": c_slab}
+            else:
+                blob = {"ssm": jax.device_get(s_slab),
+                        "conv": jax.device_get(c_slab)}
+            stashed = [(-1, blob)] + entries
         try:
-            self.arena.put(tid, entries)
+            self.arena.put(tid, stashed)
         except HostArenaFull:
             # the released pages are still free (nothing allocated since),
             # so swap_in cannot fail here; np.stack on the lazy blobs
             # simply forces the transfer inline
+            if s_slab is not None:
+                back = self.states.swap_in(tid)
+                self.pages["ssm_state"] = (
+                    self.pages["ssm_state"].at[:, back].set(s_slab))
+                self.pages["conv_state"] = (
+                    self.pages["conv_state"].at[:, back].set(c_slab))
             self._restore_pages(self.pool.swap_in(tid), entries)
             raise
-        if async_on and entries:
+        if async_on and stashed:
             handle = self.ledger.begin(tid, [p for _, p in released])
             self._transfer_worker().submit(
-                self._materialize_entries, handle, entries)
+                self._materialize_entries, handle, stashed)
         if self.draft is not None:
             # a suspended task's draft state is simply dropped (DESIGN.md
             # §8): its committed history survives in _gen, so the first
@@ -1793,8 +1905,8 @@ class PagedJaxExecutor(Executor):
         t0 = time.perf_counter()
         try:
             for _, blob in entries:
-                blob["k"] = np.asarray(blob["k"])
-                blob["v"] = np.asarray(blob["v"])
+                for key in blob:          # {"k","v"} pages or {"ssm","conv"}
+                    blob[key] = np.asarray(blob[key])
         finally:
             self.gap_stats.add_swap_overlap(
                 (time.perf_counter() - t0) * 1000.0)
@@ -1812,8 +1924,25 @@ class PagedJaxExecutor(Executor):
         self.ledger.wait(tid)
         async_on = self._async_on()
         t0 = time.perf_counter()
-        restored = self._reserve(lambda: self.pool.swap_in(tid))
-        self._restore_pages(restored, self.arena.take(tid))
+        slot = -1
+        if self.states is not None and self.states.is_swapped(tid):
+            slot = self.states.swap_in(tid)   # OutOfStates: nothing changed
+        try:
+            restored = self._reserve(lambda: self.pool.swap_in(tid))
+        except OutOfPages:
+            if slot >= 0:
+                self.states.swap_out(tid)     # give the fresh slot back
+            raise
+        entries = self.arena.take(tid)
+        state = [blob for li, blob in entries if li < 0]
+        self._restore_pages(restored, [e for e in entries if e[0] >= 0])
+        if state:
+            self.pages["ssm_state"] = self.pages["ssm_state"].at[:, slot].set(
+                self._dev_in(np.asarray(state[0]["ssm"])))
+            self.pages["conv_state"] = (
+                self.pages["conv_state"].at[:, slot].set(
+                    self._dev_in(np.asarray(state[0]["conv"]))))
+            self._canonicalize_pages()
         ms = (time.perf_counter() - t0) * 1000.0
         if async_on:
             self.gap_stats.dispatch_ms += ms
@@ -1830,6 +1959,8 @@ class PagedJaxExecutor(Executor):
             self._queue.commit_oldest()
         self.ledger.wait(tid)
         self.pool.free(tid)
+        if self.states is not None:
+            self.states.free(tid)
         self.arena.drop(tid)
         self._last_tok.pop(tid, None)
         self._tok_dev.pop(tid, None)
@@ -1848,11 +1979,15 @@ class PagedJaxExecutor(Executor):
         # reserve that many pages so probing never exhausts the pool
         nmax = min(self.max_batch,
                    max(1, self.n_pages // max(1, self.pool.pages_for(32))))
+        if self.states is not None:
+            nmax = min(nmax, max(1, self.states.free_slots))
         probes = sorted({b for b in (1, 2, 4, 8, nmax) if b <= nmax})
         warm = [qa_task() for _ in range(nmax)]
         with self._sync_mode():
             for t in warm:
                 self.pool.alloc(t.task_id, 1)
+                if self.states is not None:
+                    self.states.alloc(t.task_id)
                 self._last_tok[t.task_id] = 0
             lat = _probe_latency_curve(self, warm, probes)
             for t in warm:

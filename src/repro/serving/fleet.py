@@ -92,15 +92,20 @@ class FleetRouter:
         rates = sorted((quantized_rate(t.slo.tpot_ms) for t in live),
                        reverse=True)
         free = None
+        free_states = None
         pb = inst.page_budget
         if pb is not None:
             if pb.free_pages_now is not None:
                 free = int(pb.free_pages_now())
             else:
                 free = pb.total_pages - sum(pb.held_for(t) for t in live)
+            if getattr(pb, "total_states", 0):
+                # state-kind headroom (DESIGN.md §12): one slot per task
+                free_states = pb.total_states - sum(
+                    pb.held_states_for(t) for t in live)
         return InstanceView(tier=inst.tier, lat=inst.lat, rates_desc=rates,
                             free_pages=free, page_budget=pb,
-                            quality=inst.quality)
+                            quality=inst.quality, free_states=free_states)
 
     def views(self, drivers: Dict[str, InstanceDriver]) -> List[InstanceView]:
         return [self.view(inst, drivers[inst.name].live_tasks())

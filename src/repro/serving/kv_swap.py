@@ -33,6 +33,15 @@ worker materializes each blob IN PLACE (``blob["k"] = np.asarray(...)``),
 so ``check()``'s byte audit holds before, during, and after the
 transfer. ``take``/``drop`` callers must wait out the owner's ledger
 entry first — the executor's resume/release do.
+
+Cache kinds (DESIGN.md §12): the arena is kind-agnostic — an entry is
+(logical index, blob dict) and blobs may carry any keys. SSM/hybrid
+archs stash the task's constant-size recurrent state as a ``{"ssm",
+"conv"}`` blob at sentinel logical index ``-1``, PREPENDED to the KV
+page entries so ``check()``'s ascending-unique-index audit covers it,
+and the whole suspension stays one atomic ``put`` (capacity is priced
+across both kinds; ``HostArenaFull`` rolls back state and pages
+together in the executor).
 """
 from __future__ import annotations
 

@@ -339,10 +339,17 @@ def test_paged_executor_admits_more_than_slot_at_equal_bytes(tiny_cfg):
     assert budget.fits(tasks)
 
 
-def test_paged_executor_rejects_ssm_archs():
+def test_paged_executor_gates_ssm_feature_combos():
+    """SSM archs are first-class now (DESIGN.md §12) — but features that
+    rewind/share/shard per-token KV must still raise for them, and the
+    engine must come up with the state-kind store wired."""
     from repro.configs import get_config
     from repro.serving.executor import PagedJaxExecutor
 
     cfg = get_config("mamba2-780m").reduced()
-    with pytest.raises(ValueError):
-        PagedJaxExecutor(cfg, n_pages=4, page_size=16, max_seq=64)
+    ex = PagedJaxExecutor(cfg, n_pages=4, page_size=16, max_seq=64)
+    assert ex.states is not None and ex.store.kinds == ("state",)
+    for kw in ({"spec_decode": True}, {"prefix_cache": True},
+               {"prefill_chunk_size": 16}):
+        with pytest.raises(ValueError, match="DESIGN.md"):
+            PagedJaxExecutor(cfg, n_pages=4, page_size=16, max_seq=64, **kw)

@@ -600,3 +600,129 @@ def test_jax_mask_matrix_matches_numpy(v0, n):
     ref = build_mask_matrix(rates.tolist())
     got = np.asarray(jax_impl.build_mask_matrix(jnp.asarray(rates.copy()), v0))
     np.testing.assert_array_equal(got, ref)
+
+
+@given(st.data())
+@settings(max_examples=60, deadline=None)
+def test_state_store_interleavings_no_leaks_no_cross_kind_aliasing(data):
+    """DESIGN.md §12 safety: random interleavings of hybrid-owner
+    alloc / decode-step / suspend / resume / free across BOTH cache kinds
+    (paged KV + O(1) recurrent state slots) never leak either kind, never
+    let one owner's writes land in another owner's state slot or KV page,
+    and round-trip a suspended owner's state blob BIT-exactly (the blob
+    is an opaque snapshot taken before the slot is released — nothing
+    recomputes it). The two kinds move together: suspend stashes both,
+    resume restores both or neither (OutOfPages after the slot came back
+    rolls the slot out again, exactly the executor's discipline)."""
+    from repro.serving.kv_pool import KVPagePool, OutOfPages
+    from repro.serving.state_store import (CacheStore, OutOfStates,
+                                           SSMStateStore)
+
+    PSZ = 2
+    pool = KVPagePool(n_pages=10, page_size=PSZ)
+    states = SSMStateStore(n_slots=3)
+    slot_mem = np.zeros((3, 4), np.float32)   # models the device state arena
+    page_shadow = {}     # phys page -> tokens written
+    canonical = {}       # owner -> true state vector right now
+    owners = {}          # owner -> its tokens
+    host = {}            # owner -> (stashed state blob, {logical: tokens})
+    next_owner = 0
+    token = st.integers(0, 1)
+    ops = data.draw(st.lists(st.sampled_from(
+        ["new", "step", "suspend", "resume", "free"]),
+        min_size=1, max_size=40))
+    for op in ops:
+        resident = sorted(o for o in owners if o not in host)
+        if op == "new":
+            toks = tuple(data.draw(
+                st.lists(token, min_size=1, max_size=6), label="prompt"))
+            o, next_owner = next_owner, next_owner + 1
+            try:
+                pool.alloc(o, len(toks))
+            except OutOfPages:
+                pool.check()
+                continue
+            try:
+                slot = states.alloc(o)
+            except OutOfStates:
+                pool.free(o)        # admission is all-or-nothing per kind
+                states.check()
+                continue
+            for li, p in enumerate(pool.page_table(o)):
+                page_shadow[p] = toks[li * PSZ:(li + 1) * PSZ]
+            vec = np.full((4,), 1.0 + o, np.float32)
+            vec[0] += data.draw(st.integers(0, 7), label="seed") / 8.0
+            slot_mem[slot] = vec
+            canonical[o] = vec.copy()
+            owners[o] = toks
+        elif op == "step" and resident:
+            # a decode step mutates the resident state in place
+            o = data.draw(st.sampled_from(resident), label="step")
+            slot = states.slot_of(o)
+            slot_mem[slot] = slot_mem[slot] * 0.5 + 1.0
+            canonical[o] = slot_mem[slot].copy()
+        elif op == "suspend" and resident:
+            o = data.draw(st.sampled_from(resident), label="suspend")
+            slot = states.slot_of(o)
+            blob = slot_mem[slot].copy()        # snapshot BEFORE releasing
+            states.swap_out(o)
+            kv = {li: page_shadow[p] for li, p in pool.swap_out(o)}
+            host[o] = (blob, kv)
+        elif op == "resume" and host:
+            o = data.draw(st.sampled_from(sorted(host)), label="resume")
+            try:
+                slot = states.swap_in(o)        # slot first (cheap) ...
+            except OutOfStates:
+                states.check()
+                continue
+            try:
+                restored = pool.swap_in(o)      # ... pages second
+            except OutOfPages:
+                states.swap_out(o)              # roll the slot back out
+                pool.check()
+                continue
+            blob, kv = host.pop(o)
+            assert np.array_equal(blob, canonical[o]), \
+                "state blob mutated across the swap round-trip"
+            slot_mem[slot] = blob
+            assert sorted(li for li, _ in restored) == sorted(kv)
+            for li, p in restored:
+                page_shadow[p] = kv[li]
+        elif op == "free" and owners:
+            o = data.draw(st.sampled_from(sorted(owners)), label="free")
+            pool.free(o)
+            states.free(o)                      # idempotent either way
+            del owners[o]
+            canonical.pop(o)
+            host.pop(o, None)
+        # ---- per-step audits ----
+        pool.check()
+        states.check()
+        for o in owners:                        # kinds never drift apart
+            # (pool.holds excludes swapped owners; the state store's holds
+            # spans both — normalize before comparing)
+            assert (pool.holds(o) or pool.is_swapped(o)) and states.holds(o)
+            assert pool.is_swapped(o) == states.is_swapped(o) == (o in host)
+        assert states.used_slots == len(owners) - len(host)
+        for o in owners:
+            if o in host:                       # host copy stays bit-exact
+                blob, kv = host[o]
+                assert np.array_equal(blob, canonical[o])
+                for li, got in kv.items():
+                    assert got == owners[o][li * PSZ: li * PSZ + len(got)]
+            else:                               # no cross-owner aliasing
+                assert np.array_equal(slot_mem[states.slot_of(o)],
+                                      canonical[o])
+                for li, p in enumerate(pool.page_table(o)):
+                    got = page_shadow[p]
+                    assert got == owners[o][li * PSZ: li * PSZ + len(got)]
+    for o in list(owners):
+        pool.free(o)
+        states.free(o)
+    cfg = type("Cfg", (), {"name": "prop", "has_attention": True,
+                           "has_ssm": True, "n_layers": 1, "n_kv_heads": 1,
+                           "head_dim": 4, "ssm_heads": 1, "ssm_head_dim": 4,
+                           "ssm_state": 4, "ssm_inner": 4, "ssm_conv": 2})()
+    store = CacheStore(cfg, pool, states)
+    assert store.leaked() == 0                  # zero leaks, both kinds
+    store.check()
