@@ -102,6 +102,8 @@ def run(tiny: bool = False, engine: bool = True) -> None:
                       "drafted_tokens", "accepted_tokens")
     decisions_equal = all(getattr(resA, f) == getattr(resB, f)
                           for f in decision_fields)
+    # defer causes are deterministic policy outputs too — they must match
+    decisions_equal &= resA.defers_by_reason == resB.defers_by_reason
     decisions_equal &= all(
         a.finished == b.finished and a.tokens_done == b.tokens_done
         for a, b in zip(resA.tasks, resB.tasks))
@@ -190,6 +192,7 @@ def run(tiny: bool = False, engine: bool = True) -> None:
         "transfers_outstanding": transfers_outstanding,
         "pages_leaked": pages_leaked,
         "pipeline_stalls": stalls,
+        "defers_by_reason": resA.defers_by_reason,
     }, "config": {"tiny": tiny, "reps": REPS, "steady_cycles": cycles,
                   "n_tasks": 4, "output_len": 24 if tiny else 48}}
     emit("async_pipeline/decisions_equal", float(decisions_equal))

@@ -22,6 +22,32 @@ def save_json(name: str, payload: Dict[str, Any]) -> str:
     return path
 
 
+def merge_defers(dicts) -> Dict[str, int]:
+    """Fold per-seed ``LoopResult.defers_by_reason`` dicts into one
+    (DESIGN.md §13). Benchmark rows average their numeric metrics across
+    seeds; defer counts are event tallies, so they SUM — averaging a
+    count dict would just divide every bucket by the seed count."""
+    out: Dict[str, int] = {}
+    for d in dicts:
+        for k, v in (d or {}).items():
+            out[k] = out.get(k, 0) + int(v)
+    return out
+
+
+def merge_attribution(attrs) -> Dict[str, Any]:
+    """Fold per-seed ``metrics.slo_attribution`` outputs: buckets and
+    violation totals sum across seeds (same tally rule as defers)."""
+    buckets: Dict[str, int] = {}
+    violations = 0
+    for a in attrs:
+        if not a:
+            continue
+        violations += int(a.get("violations", 0))
+        for k, v in a.get("buckets", {}).items():
+            buckets[k] = buckets.get(k, 0) + int(v)
+    return {"buckets": buckets, "violations": violations}
+
+
 class timer:
     def __enter__(self):
         self.t0 = time.perf_counter()

@@ -32,7 +32,7 @@ Engine checks (real paged JAX engines on CPU):
 """
 from __future__ import annotations
 
-from benchmarks.common import emit, save_json
+from benchmarks.common import emit, merge_defers, save_json
 
 RATE = 2.0
 RT_FRAC = 0.5
@@ -90,7 +90,7 @@ def _workload(seed: int, duration_s: float):
 
 def _run_sim(mode: str, seed: int, duration_s: float):
     from repro.serving.fleet import run_fleet_loop, sim_fleet
-    from repro.serving.metrics import summarize
+    from repro.serving.metrics import per_tier, summarize
     tasks = _workload(seed, duration_s)
     router = sim_fleet(_tiers(mode), total_pages=TOTAL_PAGES)
     res = run_fleet_loop(router, tasks, max_ms=3e7)
@@ -98,13 +98,19 @@ def _run_sim(mode: str, seed: int, duration_s: float):
     unserved = sum(1 for t in res.tasks if not t.finished and not t.dropped)
     s = summarize(res.tasks)
     n_inst = sum(len(lr.tasks) for lr in res.per_instance.values())
-    return {"slo": s["all"].slo, "rt_slo": s["realtime"].slo,
-            "nrt_slo": s["non_realtime"].slo,
-            "rt_ttft_p99_ms": s["realtime"].ttft_p99_ms,
-            "spills": res.spills, "degraded": res.degraded,
-            "pages_leaked": leaked, "unserved": unserved,
-            "double_counted": n_inst - len(tasks),
-            "n": s["all"].n}
+    row = {"slo": s["all"].slo, "rt_slo": s["realtime"].slo,
+           "nrt_slo": s["non_realtime"].slo,
+           "rt_ttft_p99_ms": s["realtime"].ttft_p99_ms,
+           "spills": res.spills, "degraded": res.degraded,
+           "pages_leaked": leaked, "unserved": unserved,
+           "double_counted": n_inst - len(tasks),
+           "n": s["all"].n}
+    # observability (DESIGN.md §13): per-tier tails (full Attainment rows
+    # incl. TTFT/TPOT p50/p99 per serving instance) + defer causes
+    extras = {"defers_by_reason": res.merged.defers_by_reason,
+              "per_tier": {name: a.row()
+                           for name, a in per_tier(res.tasks).items()}}
+    return row, extras
 
 
 def _sim_degenerate_equal(duration_s: float):
@@ -293,10 +299,19 @@ def run(tiny: bool = False, engine: bool = False) -> None:
                           "small_scale": SMALL_SCALE,
                           "rt_deadline_ms": RT_DEADLINE_MS}}
     for mode in MODES:
-        acc = [_run_sim(mode, s, duration) for s in seeds]
+        runs = [_run_sim(mode, s, duration) for s in seeds]
+        acc = [r for r, _ in runs]
+        extras = [e for _, e in runs]
         row = {k: sum(a[k] for a in acc) / len(acc) for k in acc[0]}
         row["spills"] = sum(a["spills"] for a in acc)
         row["degraded"] = sum(a["degraded"] for a in acc)
+        row["defers_by_reason"] = merge_defers(
+            e["defers_by_reason"] for e in extras)
+        # per-tier Attainment rows (tails included) from the FIRST seed:
+        # a per-instance latency distribution is a shape, not a counter —
+        # averaging p99s across seeds would manufacture a percentile no
+        # run produced
+        row["per_tier"] = extras[0]["per_tier"]
         payload["sim"][mode] = row
         emit(f"fleet_routing/{mode}/slo", round(row["slo"], 4))
         emit(f"fleet_routing/{mode}/rt_slo", round(row["rt_slo"], 4))

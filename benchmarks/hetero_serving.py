@@ -118,6 +118,7 @@ def _serve_arch(name: str, decode_steps: int):
             "swap_exact": int(swap_exact),
             "finished": finished,
             "served_ok": int(finished == len(loop_tasks)),
+            "defers_by_reason": res.defers_by_reason,
             "leaked": ex.store.leaked(),
             "pages_leaked": ex.pool.used_pages,
             "states_leaked": (0 if ex.states is None

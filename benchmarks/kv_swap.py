@@ -23,7 +23,8 @@ Engine checks (real paged JAX engine on CPU):
 """
 from __future__ import annotations
 
-from benchmarks.common import emit, save_json
+from benchmarks.common import (emit, merge_attribution, merge_defers,
+                               save_json)
 
 POOL_TOKENS = 1024          # the §KV-paging memory-bound regime
 PAGE_TOKENS = 16
@@ -39,7 +40,8 @@ def _run_sim(kv_swap: bool, seed: int, duration_s: float):
     from repro.data.workload import poisson_workload
     from repro.serving.executor import PagedSimExecutor
     from repro.serving.loop import run_serving_loop
-    from repro.serving.metrics import summarize
+    from repro.serving.metrics import slo_attribution, summarize
+    from repro.serving.trace import TraceRecorder
 
     lat = paper_fig1_model()
     lat.swap_bw_gbps = SWAP_BW_GBPS
@@ -52,17 +54,23 @@ def _run_sim(kv_swap: bool, seed: int, duration_s: float):
     # are being compared on (a dropped task has no TTFT at all)
     sched = SliceScheduler(lat, page_budget=ex.budget, kv_swap=kv_swap,
                            drop_expired_realtime=False)
-    res = run_serving_loop(sched, ex, tasks)
+    # trace for SLO-violation attribution (DESIGN.md §13) — read-only:
+    # every metric below is byte-identical with tracing off
+    tr = TraceRecorder(capacity=1 << 20)
+    res = run_serving_loop(sched, ex, tasks, trace=tr)
     s = summarize(res.tasks)
-    return {"slo": s["all"].slo, "rt_slo": s["realtime"].slo,
-            "nrt_slo": s["non_realtime"].slo,
-            "rt_ttft_p50_ms": s["realtime"].ttft_p50_ms,
-            "rt_ttft_p99_ms": s["realtime"].ttft_p99_ms,
-            "rt_tpot_p99_ms": s["realtime"].tpot_p99_ms,
-            "suspends": res.suspends, "resumes": res.resumes,
-            "swapped_mb": res.swapped_bytes / 1e6,
-            "finished": sum(1 for t in res.tasks if t.finished),
-            "n": s["all"].n}
+    row = {"slo": s["all"].slo, "rt_slo": s["realtime"].slo,
+           "nrt_slo": s["non_realtime"].slo,
+           "rt_ttft_p50_ms": s["realtime"].ttft_p50_ms,
+           "rt_ttft_p99_ms": s["realtime"].ttft_p99_ms,
+           "rt_tpot_p99_ms": s["realtime"].tpot_p99_ms,
+           "suspends": res.suspends, "resumes": res.resumes,
+           "swapped_mb": res.swapped_bytes / 1e6,
+           "finished": sum(1 for t in res.tasks if t.finished),
+           "n": s["all"].n}
+    extras = {"defers_by_reason": res.defers_by_reason,
+              "attribution": slo_attribution(res.tasks, tr.events)}
+    return row, extras
 
 
 def _run_engine_equivalence():
@@ -156,9 +164,17 @@ def run(tiny: bool = False, engine: bool = False) -> None:
                           "swap_bw_gbps": SWAP_BW_GBPS,
                           "seeds": list(seeds)}}
     for kv_swap in (False, True):
-        acc = [_run_sim(kv_swap, s, duration) for s in seeds]
+        runs = [_run_sim(kv_swap, s, duration) for s in seeds]
+        acc = [r for r, _ in runs]
+        extras = [e for _, e in runs]
         row = {k: (sum(a[k] for a in acc) / len(acc)
                    if acc[0][k] is not None else None) for k in acc[0]}
+        # observability (DESIGN.md §13): defer causes + violation
+        # attribution, summed across seeds (counts, not averages)
+        row["defers_by_reason"] = merge_defers(
+            e["defers_by_reason"] for e in extras)
+        row["attribution"] = merge_attribution(
+            e["attribution"] for e in extras)
         key = "swap" if kv_swap else "defer"
         payload["sim"][key] = row
         emit(f"kv_swap/{key}/rt_ttft_p99_ms", round(row["rt_ttft_p99_ms"], 2))

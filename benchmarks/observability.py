@@ -1,0 +1,250 @@
+"""Observability gate (EXPERIMENTS.md §Observability, DESIGN.md §13):
+the trace layer must observe without perturbing, and its second ledger
+must balance.
+
+Three contracts, all structural (deterministic per seed — CI-gateable):
+
+  1. read-only   — the SAME workload through the SAME engine, traced and
+                   untraced, produces identical policy decisions, token
+                   timestamps and SLO metrics (the recorder never feeds
+                   back into scheduling);
+  2. conservation— replaying the event stream reproduces the LoopResult
+                   counters EXACTLY (engine loop with kv_swap + spec
+                   decode + chunked prefill all live, and a 2-instance
+                   fleet loop folding per-track streams into the merged
+                   result), and the attribution buckets partition the
+                   violated-request set;
+  3. overhead    — an enabled recorder costs < 10% wall-clock on the sim
+                   loop (best-of-N both sides, so the gate measures the
+                   recorder, not runner jitter), and the ring never drops
+                   events at benchmark scale.
+
+Plus: the Perfetto export round-trips through ``json.load`` with
+per-track monotonically non-overlapping spans.
+
+  PYTHONPATH=src python -m benchmarks.observability [--tiny]
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from benchmarks.common import RESULTS_DIR, emit, save_json
+
+POOL_TOKENS = 1024
+PAGE_TOKENS = 16
+SEED = 1
+RATE = 2.0
+DURATION_S = 30.0
+OVERHEAD_SAMPLES = 10          # timed runs per side, interleaved
+OVERHEAD_DURATION_S = 60.0
+OVERHEAD_BAND = 1.10
+
+
+def _workload(seed: int, duration_s: float):
+    from repro.data.workload import poisson_workload
+    tasks = poisson_workload(rate_per_s=RATE, duration_s=duration_s,
+                             seed=seed, realtime_frac=0.4,
+                             voice_output_len=96, qa_output_len=96)
+    for i, t in enumerate(tasks):
+        # pin ids: the sim's per-task draft-acceptance streams are seeded
+        # by task_id, so results must not depend on global counter state
+        t.task_id = 1_000_000 * (seed + 1) + i
+    return tasks
+
+
+def _engine(seed: int, duration_s: float, trace, chunk=64):
+    """One memory-starved SLICE run with kv_swap + spec decode + chunked
+    prefill all enabled. Chunked admission spreads page growth enough
+    that swap planning rarely fires under it, so the benchmark ALSO runs
+    the atomic-prefill variant (``chunk=None`` — the kv_swap regime,
+    where suspend/resume demonstrably fire) and conserves both."""
+    from repro.core.latency_model import paper_fig1_model
+    from repro.core.schedulers import SliceScheduler
+    from repro.serving.executor import PagedSimExecutor
+    from repro.serving.loop import run_serving_loop
+
+    lat = paper_fig1_model()
+    ex = PagedSimExecutor(lat, POOL_TOKENS // PAGE_TOKENS, PAGE_TOKENS)
+    sched = SliceScheduler(lat, page_budget=ex.budget, kv_swap=True,
+                           spec_decode=True, prefill_chunk=chunk,
+                           drop_expired_realtime=False)
+    return run_serving_loop(sched, ex, _workload(seed, duration_s),
+                            trace=trace)
+
+
+def _fingerprint(res):
+    """Everything the read-only contract protects: policy counters and
+    the full per-task timeline, down to each token timestamp."""
+    return {
+        "counters": (res.decode_iterations, res.prefills,
+                     res.prefill_chunks, res.suspends, res.resumes,
+                     res.spec_extra_tokens, res.drafted_tokens,
+                     res.accepted_tokens, res.swapped_bytes),
+        "defers": dict(res.defers_by_reason),
+        "tasks": [(t.task_id, t.finished, t.dropped, t.tokens_done,
+                   t.ttft_ms, tuple(t.token_times_ms))
+                  for t in res.tasks],
+    }
+
+
+def _spans_well_formed(path: str) -> bool:
+    """Perfetto JSON round-trip + per-track span monotonicity: on each
+    tid, "X" spans sorted by start must not overlap (the loop clock only
+    moves forward, so a violation means a producer-side bug)."""
+    with open(path) as f:
+        doc = json.load(f)
+    evs = doc["traceEvents"]
+    if not evs or doc["otherData"]["dropped_events"] != 0:
+        return False
+    tracks = {}
+    for e in evs:
+        if e.get("ph") == "X":
+            tracks.setdefault(e["tid"], []).append((e["ts"], e["dur"]))
+    for spans in tracks.values():
+        spans.sort()
+        for (t0, d0), (t1, _) in zip(spans, spans[1:]):
+            if t1 < t0 + d0 - 1e-6:
+                return False
+    return bool(tracks)
+
+
+def _run_fleet(duration_s: float, trace):
+    """2-instance, 2-tier sim fleet (small + large) under one recorder:
+    per-track streams must fold into the MERGED LoopResult exactly,
+    including the router's fleet-layer 'tier' defers."""
+    from repro.core.latency_model import MeasuredLatencyModel, paper_fig1_model
+    from repro.serving.fleet import SimTier, run_fleet_loop, sim_fleet
+
+    big = paper_fig1_model()
+    small = MeasuredLatencyModel(
+        [(b, ms * 0.4) for b, ms in big._bs],
+        prefill_samples=[(n, ms * 0.4) for n, ms in big._ps])
+    router = sim_fleet([SimTier("small", 0, small, quality=0.8),
+                        SimTier("large", 1, big, quality=1.0)],
+                       total_pages=64)
+    tasks = _workload(7, duration_s)
+    for t in tasks:
+        if t.kind == "qa":
+            t.min_tier = 1
+    return run_fleet_loop(router, tasks, max_ms=3e7, trace=trace)
+
+
+def run(tiny: bool = False) -> None:
+    from repro.serving.metrics import slo_attribution
+    from repro.serving.trace import TraceRecorder, events_conserved
+
+    duration = 10.0 if tiny else DURATION_S
+    payload = {"sim": {}, "config": {"rate": RATE, "duration_s": duration,
+                                     "seed": SEED,
+                                     "pool_tokens": POOL_TOKENS,
+                                     "overhead_samples": OVERHEAD_SAMPLES,
+                                     "overhead_duration_s": OVERHEAD_DURATION_S,
+                                     "overhead_band": OVERHEAD_BAND}}
+    sim = payload["sim"]
+
+    # --- read-only + conservation on the full-featured engine loop ------
+    tr = TraceRecorder(capacity=1 << 20)
+    res_traced = _engine(SEED, duration, trace=tr)
+    res_plain = _engine(SEED, duration, trace=None)
+    sim["untraced_identical"] = int(
+        _fingerprint(res_traced) == _fingerprint(res_plain))
+    sim["events"] = len(tr)
+
+    # swap-pressure variant (atomic prefill): suspend/resume fire here
+    tr_swap = TraceRecorder(capacity=1 << 20)
+    res_swap = _engine(SEED, duration, trace=tr_swap, chunk=None)
+    sim["events_dropped"] = tr.dropped + tr_swap.dropped
+    sim["events_conserved"] = int(
+        events_conserved(tr.events, res_traced)
+        and events_conserved(tr_swap.events, res_swap))
+    # every event source must actually have fired in one of the two
+    # configs, or the conservation check was vacuous for that counter
+    kinds = ({e.kind for e in tr.events}
+             | {e.kind for e in tr_swap.events})
+    sim["kinds_live"] = int({"arrive", "admit", "defer", "prefill_chunk",
+                             "decode", "suspend", "resume", "spec_grant",
+                             "finish"} <= kinds)
+    sim["swap_suspends"] = res_swap.suspends
+
+    # --- attribution partitions the violated set ------------------------
+    att = slo_attribution(res_traced.tasks, tr.events)
+    sim["attribution"] = {"buckets": att["buckets"],
+                          "violations": att["violations"]}
+    sim["attribution_partition"] = int(
+        sum(att["buckets"].values()) == att["violations"])
+    sim["defers_by_reason"] = res_traced.defers_by_reason
+
+    # --- Perfetto export round-trip -------------------------------------
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    trace_path = os.path.join(RESULTS_DIR, "observability_trace.json")
+    sim["perfetto_rows"] = tr.export_perfetto(trace_path)
+    sim["perfetto_valid"] = int(_spans_well_formed(trace_path))
+
+    # --- fleet conservation: per-track streams == merged result ---------
+    ftr = TraceRecorder(capacity=1 << 20)
+    fres = _run_fleet(duration, trace=ftr)
+    sim["fleet_conserved"] = int(
+        events_conserved(ftr.events, fres.merged))
+    sim["fleet_instances"] = len(ftr.instances())
+
+    # --- overhead: traced within OVERHEAD_BAND of untraced wall-clock ---
+    # Estimator built for a noisy CI runner, at a fixed 60 s sim duration
+    # even under --tiny (a tiny run is ~20 ms of wall, where timer noise
+    # alone exceeds the band). Timing noise on a loaded host is strictly
+    # ADDITIVE (preemption only ever lengthens a run), so the floor over
+    # n samples converges on the true wall from above and the ratio of
+    # interleaved floors converges on the true overhead; GC is parked
+    # during each timed run. Measured true overhead ~6%; the band is 10%.
+    import gc
+
+    def one_wall(traced: bool) -> float:
+        rec = TraceRecorder(capacity=1 << 22) if traced else None
+        gc.collect()
+        gc.disable()
+        try:
+            t0 = time.perf_counter()
+            _engine(SEED, OVERHEAD_DURATION_S, trace=rec)
+            return time.perf_counter() - t0
+        finally:
+            gc.enable()
+
+    one_wall(False)                     # warm caches outside the floors
+    one_wall(True)
+    plain, traced = [], []
+    for i in range(OVERHEAD_SAMPLES):   # alternate order across rounds
+        if i % 2 == 0:
+            plain.append(one_wall(False))
+            traced.append(one_wall(True))
+        else:
+            traced.append(one_wall(True))
+            plain.append(one_wall(False))
+    sim["overhead_ratio"] = min(traced) / max(min(plain), 1e-9)
+    sim["trace_overhead_ok"] = int(sim["overhead_ratio"] <= OVERHEAD_BAND)
+
+    for k in ("untraced_identical", "events_conserved", "kinds_live",
+              "attribution_partition", "perfetto_valid", "fleet_conserved",
+              "trace_overhead_ok", "events", "events_dropped"):
+        emit(f"observability/{k}", sim[k])
+    emit("observability/overhead_ratio", round(sim["overhead_ratio"], 4))
+    emit("observability/violations", sim["attribution"]["violations"])
+
+    # hard acceptance, independent of the baseline bands
+    assert sim["untraced_identical"], "tracing perturbed the run"
+    assert sim["events_conserved"], "replayed counters diverged"
+    assert sim["fleet_conserved"], "fleet replay diverged from merged"
+    assert sim["attribution_partition"], sim["attribution"]
+    assert sim["perfetto_valid"], "perfetto export failed round-trip"
+    assert sim["events_dropped"] == 0
+    save_json("observability", payload)
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke config: 10 s duration")
+    args = ap.parse_args()
+    print("name,value,derived")
+    run(tiny=args.tiny)

@@ -20,7 +20,7 @@ from typing import Optional
 
 import numpy as np
 
-from benchmarks.common import emit, save_json
+from benchmarks.common import emit, merge_defers, save_json
 
 CHUNKS = (None, 32, 64, 128, 256)
 SEEDS = (1, 2, 3)
@@ -55,13 +55,14 @@ def _run_sim(chunk: Optional[int], seed: int, duration_s: float):
     gap_p99, gap_max = _rt_gap_stats(res.tasks)
     # per-task TPOT p99 comes from the shared Attainment percentiles
     # (serving/metrics.py) — same definition as every other benchmark
-    return {"slo": s["all"].slo, "rt_slo": s["realtime"].slo,
-            "nrt_slo": s["non_realtime"].slo,
-            "rt_tpot_p99_ms": s["realtime"].tpot_p99_ms,
-            "rt_gap_p99_ms": gap_p99, "rt_gap_max_ms": gap_max,
-            "prefill_chunks": res.prefill_chunks,
-            "finished": sum(1 for t in res.tasks if t.finished),
-            "n": s["all"].n}
+    row = {"slo": s["all"].slo, "rt_slo": s["realtime"].slo,
+           "nrt_slo": s["non_realtime"].slo,
+           "rt_tpot_p99_ms": s["realtime"].tpot_p99_ms,
+           "rt_gap_p99_ms": gap_p99, "rt_gap_max_ms": gap_max,
+           "prefill_chunks": res.prefill_chunks,
+           "finished": sum(1 for t in res.tasks if t.finished),
+           "n": s["all"].n}
+    return row, {"defers_by_reason": res.defers_by_reason}
 
 
 def _run_engine():
@@ -111,9 +112,13 @@ def run(tiny: bool = False, engine: bool = False) -> None:
                "config": {"rate": RATE, "duration_s": duration,
                           "qa_prompt": QA_PROMPT, "seeds": list(seeds)}}
     for chunk in chunks:
-        acc = [_run_sim(chunk, s, duration) for s in seeds]
+        runs = [_run_sim(chunk, s, duration) for s in seeds]
+        acc = [r for r, _ in runs]
         row = {k: (sum(a[k] for a in acc) / len(acc)
                    if acc[0][k] is not None else None) for k in acc[0]}
+        # defer causes sum across seeds (DESIGN.md §13) — counts, not means
+        row["defers_by_reason"] = merge_defers(
+            e["defers_by_reason"] for _, e in runs)
         key = "atomic" if chunk is None else f"chunk={chunk}"
         payload["sim"][key] = row
         emit(f"prefill_interference/{key}/rt_tpot_p99_ms",

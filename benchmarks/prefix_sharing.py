@@ -21,7 +21,7 @@ from __future__ import annotations
 
 from typing import Optional
 
-from benchmarks.common import emit, save_json
+from benchmarks.common import emit, merge_defers, save_json
 
 PAGE_TOKENS = 16
 POOL_TOKENS = 2048
@@ -155,11 +155,12 @@ def _run_sim(shared_frac: float, seed: int, duration_s: float,
         ex = SimExecutor(lat)
     res = run_serving_loop(sched, ex, tasks)
     s = summarize(res.tasks)
-    return {"slo": s["all"].slo, "rt_slo": s["realtime"].slo,
-            "nrt_slo": s["non_realtime"].slo,
-            "finished": sum(1 for t in res.tasks if t.finished),
-            "dropped": sum(1 for t in res.tasks if t.dropped),
-            "n": s["all"].n}
+    row = {"slo": s["all"].slo, "rt_slo": s["realtime"].slo,
+           "nrt_slo": s["non_realtime"].slo,
+           "finished": sum(1 for t in res.tasks if t.finished),
+           "dropped": sum(1 for t in res.tasks if t.dropped),
+           "n": s["all"].n}
+    return row, {"defers_by_reason": res.defers_by_reason}
 
 
 def run(tiny: bool = False, engine: bool = True) -> None:
@@ -172,8 +173,13 @@ def run(tiny: bool = False, engine: bool = True) -> None:
                           "page_tokens": PAGE_TOKENS, "seeds": list(seeds)}}
     for frac in fracs:
         for mode, on in (("unshared", False), ("shared", True)):
-            acc = [_run_sim(frac, s, duration, sharing_on=on) for s in seeds]
+            runs = [_run_sim(frac, s, duration, sharing_on=on)
+                    for s in seeds]
+            acc = [r for r, _ in runs]
             row = {k: sum(a[k] for a in acc) / len(acc) for k in acc[0]}
+            # defer causes sum across seeds (DESIGN.md §13), not averaged
+            row["defers_by_reason"] = merge_defers(
+                e["defers_by_reason"] for _, e in runs)
             payload["sim"][f"{mode}/frac={frac}"] = row
             emit(f"prefix_sharing/{mode}/frac={frac}/slo", round(row["slo"], 4))
             emit(f"prefix_sharing/{mode}/frac={frac}/rt_slo",

@@ -83,6 +83,21 @@ GATES = [
     ("hetero_serving", ("engine", "states_leaked"), "low", 0.0),
     ("hetero_serving", ("fleet", "unserved"), "low", 0.0),
     ("hetero_serving", ("fleet", "double_counted"), "low", 0.0),
+    # gate 9: observability — structural only (DESIGN.md §13): tracing is
+    # read-only (identical run traced vs untraced), the event-stream
+    # replay balances the LoopResult ledger exactly (engine AND fleet),
+    # attribution buckets partition the violated-request set, the
+    # Perfetto export round-trips through json.load, and an enabled
+    # recorder stays inside the 10% wall-clock band (best-of-N floors on
+    # both sides, so runner jitter cannot flake the gate)
+    ("observability", ("sim", "untraced_identical"), "high", 0.0),
+    ("observability", ("sim", "events_conserved"), "high", 0.0),
+    ("observability", ("sim", "kinds_live"), "high", 0.0),
+    ("observability", ("sim", "attribution_partition"), "high", 0.0),
+    ("observability", ("sim", "perfetto_valid"), "high", 0.0),
+    ("observability", ("sim", "fleet_conserved"), "high", 0.0),
+    ("observability", ("sim", "trace_overhead_ok"), "high", 0.0),
+    ("observability", ("sim", "events_dropped"), "low", 0.0),
 ]
 
 
@@ -156,7 +171,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig1,table2,fig7,fig10,"
                          "fig11,kv,prefill,prefix,swap,spec,sharded,async,"
-                         "fleet,hetero")
+                         "fleet,hetero,obs")
     ap.add_argument("--tiny", action="store_true",
                     help="CI smoke configs for the benches that have one")
     ap.add_argument("--check", action="store_true",
@@ -174,9 +189,10 @@ def main() -> None:
 
     from benchmarks import (async_pipeline, dynamic_slo, fleet_routing,
                             hetero_serving, kv_pressure, kv_swap,
-                            latency_vs_batch, prefill_interference,
-                            prefix_sharing, ratio_sweep, sharded_serving,
-                            spec_decode, static_tpot, workload_sweep)
+                            latency_vs_batch, observability,
+                            prefill_interference, prefix_sharing,
+                            ratio_sweep, sharded_serving, spec_decode,
+                            static_tpot, workload_sweep)
 
     print("name,value,derived")
     t0 = time.time()
@@ -209,6 +225,8 @@ def main() -> None:
         fleet_routing.run(tiny=args.tiny, engine=not args.skip_engine)
     if only is None or "hetero" in only:
         hetero_serving.run(tiny=args.tiny)
+    if only is None or "obs" in only:
+        observability.run(tiny=args.tiny)
     print(f"total_wall_s,{time.time() - t0:.1f},", flush=True)
 
     ran = {"prefill_interference"} if only is None or "prefill" in only else set()
@@ -226,6 +244,8 @@ def main() -> None:
         ran.add("fleet_routing")
     if only is None or "hetero" in only:
         ran.add("hetero_serving")
+    if only is None or "obs" in only:
+        ran.add("observability")
     if args.update_baselines:
         update_baselines(sorted(ran & set(_gated_benches())))
     if args.check:

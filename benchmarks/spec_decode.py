@@ -25,7 +25,7 @@ Engine checks (real paged JAX engine on CPU):
 """
 from __future__ import annotations
 
-from benchmarks.common import emit, save_json
+from benchmarks.common import emit, merge_defers, save_json
 
 RATE = 2.5
 RT_FRAC = 0.6
@@ -57,16 +57,17 @@ def _run_sim(spec: bool, seed: int, duration_s: float):
                            drop_expired_realtime=False)
     res = run_serving_loop(sched, SimExecutor(lat), tasks, max_ms=3e7)
     s = summarize(res.tasks)
-    return {"slo": s["all"].slo, "rt_slo": s["realtime"].slo,
-            "nrt_slo": s["non_realtime"].slo,
-            "rt_tpot_p99_ms": s["realtime"].tpot_p99_ms,
-            "rt_tpot_p50_ms": s["realtime"].tpot_p50_ms,
-            "rt_ttft_p99_ms": s["realtime"].ttft_p99_ms,
-            "spec_extra_tokens": res.spec_extra_tokens,
-            "drafted": res.drafted_tokens, "accepted": res.accepted_tokens,
-            "decode_iterations": res.decode_iterations,
-            "finished": sum(1 for t in res.tasks if t.finished),
-            "n": s["all"].n}
+    row = {"slo": s["all"].slo, "rt_slo": s["realtime"].slo,
+           "nrt_slo": s["non_realtime"].slo,
+           "rt_tpot_p99_ms": s["realtime"].tpot_p99_ms,
+           "rt_tpot_p50_ms": s["realtime"].tpot_p50_ms,
+           "rt_ttft_p99_ms": s["realtime"].ttft_p99_ms,
+           "spec_extra_tokens": res.spec_extra_tokens,
+           "drafted": res.drafted_tokens, "accepted": res.accepted_tokens,
+           "decode_iterations": res.decode_iterations,
+           "finished": sum(1 for t in res.tasks if t.finished),
+           "n": s["all"].n}
+    return row, {"defers_by_reason": res.defers_by_reason}
 
 
 def _run_engine_equivalence():
@@ -160,8 +161,12 @@ def run(tiny: bool = False, engine: bool = False) -> None:
                           "duration_s": duration, "max_depth": MAX_DEPTH,
                           "seeds": list(seeds)}}
     for spec in (False, True):
-        acc = [_run_sim(spec, s, duration) for s in seeds]
+        runs = [_run_sim(spec, s, duration) for s in seeds]
+        acc = [r for r, _ in runs]
         row = {k: sum(a[k] for a in acc) / len(acc) for k in acc[0]}
+        # defer causes sum across seeds (DESIGN.md §13) — counts, not means
+        row["defers_by_reason"] = merge_defers(
+            e["defers_by_reason"] for _, e in runs)
         key = "spec" if spec else "depth0"
         payload["sim"][key] = row
         emit(f"spec_decode/{key}/rt_tpot_p99_ms",

@@ -26,6 +26,11 @@ from repro.core.selection import (PERIOD_BUDGET_MS, PageBudget,
                                   spec_depth_budget, task_selection)
 from repro.core.task import Task
 
+# interned defer payloads, one per reason ever seen (the taxonomy lives
+# in repro.serving.trace.DEFER_REASONS; interning by string keeps this
+# module free of a core -> serving import). READ-ONLY by trace contract.
+_DEFER_ARGS: dict = {}
+
 
 @dataclasses.dataclass
 class PrefillAction:
@@ -72,6 +77,29 @@ class DecodeAction:
 
 class Scheduler:
     name = "base"
+    # observability (DESIGN.md §13): wired by the serving loop's
+    # InstanceDriver — a TraceRecorder (or None, the zero-overhead
+    # default) and the instance name events are attributed to. Policy
+    # code only OBSERVES through these; it never branches on them.
+    trace = None
+    trace_name = "engine"
+
+    def note_defer(self, task: Task, now: float, reason: str) -> None:
+        """Count one defer decision (reason: pages | states | time |
+        batch) — always, so LoopResult.defers_by_reason is populated even
+        untraced; with a recorder attached, also emit the defer event.
+        Counter and event increment together, which is what makes the
+        trace replay reproduce the counters exactly. Defers are by far
+        the highest-rate instant under saturation (every replan marks
+        every still-deferred candidate), so the payload dicts are
+        interned and pushed positionally — this is what keeps the traced
+        run inside the observability benchmark's 10% overhead band."""
+        d = self.defers_by_reason
+        d[reason] = d.get(reason, 0) + 1
+        tr = self.trace
+        if tr is not None:
+            tr.push("defer", now, task.task_id, self.trace_name, 0.0,
+                    _DEFER_ARGS.setdefault(reason, {"reason": reason}))
 
     def on_arrival(self, task: Task, now: float) -> None:
         raise NotImplementedError
@@ -180,6 +208,7 @@ class SliceScheduler(Scheduler):
         self.prefill_headroom = prefill_headroom
         self._arr_times: List[float] = []
         self._prefill_ewma: float = 0.0
+        self.defers_by_reason: dict = {}    # observability (DESIGN.md §13)
         self.pool: List[Task] = []          # unscheduled, unfinished
         self.batch: List[Task] = []         # selected (sorted by rate desc)
         self.mask: Optional[np.ndarray] = None
@@ -338,8 +367,14 @@ class SliceScheduler(Scheduler):
         candidates = [t for t in candidates if not t.dropped]
         sel_budget = (self.budget_ms - self._headroom_ms()
                       - self._swap_headroom_ms(candidates))
+        defer_reasons: dict = {}
         selected, rest = task_selection(candidates, self.lat, sel_budget,
-                                        page_budget=self.page_budget)
+                                        page_budget=self.page_budget,
+                                        reasons=defer_reasons)
+        if defer_reasons:
+            by_id = {t.task_id: t for t in candidates}
+            for tid, reason in defer_reasons.items():
+                self.note_defer(by_id[tid], now, reason)
         self.suspend_queue = []
         if self.kv_swap and self.page_budget is not None:
             victims = self._plan_swaps(selected, rest, sel_budget)
@@ -353,6 +388,14 @@ class SliceScheduler(Scheduler):
         # (resume-blocked ones wait for a completion to clear the block)
         self.resume_queue = [t for t in selected if t.suspended
                              and t.task_id not in self._swap_blocked]
+        if self.trace is not None:
+            # admit marks only batch ENTRIES (a task re-selected across
+            # consecutive replans is one admission, not many)
+            prev = {t.task_id for t in self.batch}
+            for t in selected:
+                if t.task_id not in prev:
+                    self.trace.emit("admit", now, t.task_id,
+                                    self.trace_name)
         self.batch = sorted(selected, key=lambda t: -quantized_rate(t.slo.tpot_ms))
         self.pool = rest
         live_ids = {t.task_id for t in self.batch}
@@ -444,6 +487,9 @@ class SliceScheduler(Scheduler):
                 continue
             self.depth_of[t.task_id] = int(d)
             remaining -= int(d) * v
+            if self.trace is not None:
+                self.trace.emit("spec_grant", now, t.task_id,
+                                self.trace_name, depth=int(d))
 
     def _column_depths(self, tasks: List[Task]) -> Optional[List[int]]:
         """Depths for one decode column, spending the cycle's speculative-
@@ -628,6 +674,7 @@ class OrcaScheduler(Scheduler):
 
     def __init__(self, max_batch: int = 32):
         self.max_batch = max_batch
+        self.defers_by_reason: dict = {}    # observability (DESIGN.md §13)
         self.waiting: List[Task] = []
         self.running: List[Task] = []
 
@@ -642,6 +689,9 @@ class OrcaScheduler(Scheduler):
         self.running = [t for t in self.running if not t.finished]
         if self.waiting and len(self.running) < self.max_batch:
             return PrefillAction(self.waiting.pop(0))  # FCFS
+        if self.waiting:
+            # head blocked behind the batch cap for this iteration
+            self.note_defer(self.waiting[0], now, "batch")
         if self.running:
             return DecodeAction(list(self.running))
         return None
@@ -688,6 +738,7 @@ class FastServeScheduler(Scheduler):
         self.base_quantum = base_quantum
         self.page_budget = page_budget
         self.kv_swap = kv_swap
+        self.defers_by_reason: dict = {}    # observability (DESIGN.md §13)
         self.waiting: List[Task] = []
         self.running: List[Task] = []      # prefilled, unfinished (may be
                                            # suspended — excluded from decode)
@@ -812,6 +863,7 @@ class FastServeScheduler(Scheduler):
                 if act is not None:
                     return act
             # defer-only (or swap cannot help): decode what is resident
+            self.note_defer(self.waiting[0], now, "pages")
         if self.page_budget is not None and self.kv_swap:
             act = self._resume_action()
             if act is not None and not self.waiting:

@@ -6,7 +6,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.latency_model import LatencyModel
 from repro.core.mask_matrix import estimate_period_ms, quantized_rate
@@ -128,7 +128,8 @@ class StateBudget(PageBudget):
 
 def task_selection(tasks: Sequence[Task], lat: LatencyModel,
                    budget_ms: float = PERIOD_BUDGET_MS,
-                   page_budget: Optional[PageBudget] = None
+                   page_budget: Optional[PageBudget] = None,
+                   reasons: Optional[Dict[int, str]] = None
                    ) -> Tuple[List[Task], List[Task]]:
     """Algorithm 2. Returns (selected batch b, remaining pool N).
 
@@ -152,6 +153,13 @@ def task_selection(tasks: Sequence[Task], lat: LatencyModel,
     the pages of a shared prompt prefix are counted ONCE per selection
     round: the first admitted task of a prefix group pays them, later
     admissions with the same key reuse the same physical pages for free.
+
+    ``reasons`` (observability, DESIGN.md §13) is an optional out-dict the
+    caller owns: for every task this round DEFERS it records task_id ->
+    "batch" | "pages" | "states" | "time" — the Eq. 7 violator and the
+    unexamined tail behind it both count as "time" (they were kept out of
+    this cycle by the period budget). Pure observation: passing it never
+    changes the (selected, deferred) split.
     """
     pool = sorted(tasks, key=lambda t: (-t.utility_rate, t.arrival_ms, t.task_id))
     selected: List[Task] = []
@@ -187,6 +195,8 @@ def task_selection(tasks: Sequence[Task], lat: LatencyModel,
             if (page_budget.max_tasks is not None
                     and len(selected) >= page_budget.max_tasks):
                 deferred.append(t)          # engine's compiled batch ceiling
+                if reasons is not None:
+                    reasons[t.task_id] = "batch"
                 continue
             held = page_budget.held_for(t)
             need = page_budget.pages_for(t) - held
@@ -197,6 +207,8 @@ def task_selection(tasks: Sequence[Task], lat: LatencyModel,
                 need = max(0, need - min(kp, prefixes_paid.get(key, 0)))
             if pages_used + need > capacity:
                 deferred.append(t)          # defer, keep scanning
+                if reasons is not None:
+                    reasons[t.task_id] = "pages"
                 continue
             s_need = 0
             if total_states:
@@ -204,10 +216,15 @@ def task_selection(tasks: Sequence[Task], lat: LatencyModel,
                           - page_budget.held_states_for(t))
                 if states_used + s_need > total_states:
                     deferred.append(t)      # slot-starved: defer likewise
+                    if reasons is not None:
+                        reasons[t.task_id] = "states"
                     continue
         cand = rates + [quantized_rate(t.slo.tpot_ms)]
         cand.sort(reverse=True)  # sortTasksBySLORateDescending (Alg.2 line 11)
         if estimate_period_ms(cand, lat) >= budget_ms:
+            if reasons is not None:
+                for rest in pool[i:]:
+                    reasons[rest.task_id] = "time"
             return selected, deferred + pool[i:]
         selected.append(t)
         rates = cand

@@ -49,10 +49,42 @@ mesh (see dryrun.py for the lowering proof).
   # fallback and overflow spill between instances
   PYTHONPATH=src python -m repro.launch.serve --executor paged \
       --fleet smollm-360m,edge-6b
+
+  # observability (DESIGN.md §13): record the per-request lifecycle
+  # stream and export a Perfetto/Chrome-trace timeline (one track per
+  # instance, flow arrows per request); --metrics-every also samples
+  # the counters/gauges snapshot every N loop cycles. Composes with
+  # every flag above, including --async-pipeline (spans are recorded at
+  # commit time, so timestamps stay causal under dispatch-ahead)
+  PYTHONPATH=src python -m repro.launch.serve --executor paged \
+      --trace out.json --metrics-every 32
 """
 from __future__ import annotations
 
 import argparse
+
+
+def _make_trace(args):
+    """TraceRecorder for --trace, or None (the zero-overhead default)."""
+    if args.trace is None:
+        return None
+    from repro.serving.trace import TraceRecorder
+    return TraceRecorder(capacity=1 << 20,
+                         metrics_every=args.metrics_every)
+
+
+def _export_trace(tr, args, tasks, events) -> None:
+    """Write the Perfetto JSON + print the observability summary line
+    (events, snapshots, SLO-violation attribution buckets)."""
+    if tr is None:
+        return
+    from repro.serving.metrics import slo_attribution
+    rows = tr.export_perfetto(args.trace)
+    att = slo_attribution(tasks, events)
+    buckets = {k: v for k, v in att["buckets"].items() if v}
+    print(f"trace: {len(tr)} events ({tr.dropped} dropped) "
+          f"{len(tr.snapshots)} snapshots -> {args.trace} ({rows} rows); "
+          f"violations={att['violations']} attribution={buckets or '{}'}")
 
 
 def _run_fleet(args):
@@ -138,14 +170,18 @@ def _run_fleet(args):
         t.output_len = min(t.output_len, args.max_seq // 2)
         if top > 0 and t.kind == "qa":
             t.min_tier = top           # quality tier: wants the big model
-    res = run_fleet_loop(router, tasks, max_ms=3e7)
+    tr = _make_trace(args)
+    res = run_fleet_loop(router, tasks, max_ms=3e7, trace=tr)
     s = summarize(res.tasks)
     print(f"fleet({','.join(archs)}): n={s['all'].n} SLO={s['all'].slo:.1%} "
           f"RT={s['realtime'].slo:.1%} nRT={s['non_realtime'].slo:.1%} "
-          f"spills={res.spills} degraded={res.degraded}")
+          f"spills={res.spills} degraded={res.degraded} "
+          f"defers={dict(res.merged.defers_by_reason)}")
     for name, a in per_tier(res.tasks).items():
         print(f"  {name}: served={a.n} "
               f"admitted={res.admissions.get(name, 0)} SLO={a.slo:.1%}")
+    if tr is not None:
+        _export_trace(tr, args, res.tasks, tr.events)
 
 
 def main():
@@ -218,6 +254,18 @@ def main():
                          "1,4 — shards weights + the KV page arena over "
                          "the model axis (DESIGN.md §9). On CPU the device "
                          "count is forced via XLA_FLAGS automatically")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record the per-request lifecycle stream "
+                         "(DESIGN.md §13) and write a Perfetto/Chrome-"
+                         "trace JSON timeline here — open in "
+                         "ui.perfetto.dev or chrome://tracing. Composes "
+                         "with every mode incl. --fleet and "
+                         "--async-pipeline (commit-time spans)")
+    ap.add_argument("--metrics-every", type=int, default=0, metavar="N",
+                    help="with --trace: also sample a counters/gauges "
+                         "MetricsSnapshot (pages in use, resident tasks, "
+                         "defers, spec accept rate) every N loop cycles "
+                         "(default 0 = off)")
     ap.add_argument("--reduced", action="store_true", default=True,
                     help="use the reduced (CPU-feasible) config")
     ap.add_argument("--seed", type=int, default=0)
@@ -380,7 +428,8 @@ def main():
                  page_budget=page_budget if args.kv_swap else None,
                  kv_swap=args.kv_swap),
              }[args.scheduler]()
-    res = run_serving_loop(sched, ex, tasks, max_ms=3e7)
+    tr = _make_trace(args)
+    res = run_serving_loop(sched, ex, tasks, max_ms=3e7, trace=tr)
     s = summarize(res.tasks)
     swap_note = (f" suspends={res.suspends} resumes={res.resumes} "
                  f"swapped={res.swapped_bytes / 1e6:.1f}MB"
@@ -396,8 +445,11 @@ def main():
     print(f"{args.scheduler}: n={s['all'].n} SLO={s['all'].slo:.1%} "
           f"RT={s['realtime'].slo:.1%} nRT={s['non_realtime'].slo:.1%} "
           f"decode_iters={res.decode_iterations} "
-          f"prefill_chunks={res.prefill_chunks}"
+          f"prefill_chunks={res.prefill_chunks} "
+          f"defers={dict(res.defers_by_reason)}"
           f"{swap_note}{spec_note}{pipe_note}")
+    if tr is not None:
+        _export_trace(tr, args, res.tasks, tr.events)
 
 
 if __name__ == "__main__":

@@ -178,6 +178,13 @@ class Executor:
     def latency_model(self) -> LatencyModel:
         raise NotImplementedError
 
+    def trace_gauges(self) -> Dict[str, int]:
+        """Observability gauge surface (DESIGN.md §13): point-in-time
+        resource occupancy for MetricsSnapshot sampling. Read-only —
+        never mutates executor state. Executors without a paged arena
+        report nothing."""
+        return {}
+
 
 class SimExecutor(Executor):
     def __init__(self, lat: LatencyModel, scheduling_overhead_ms: float = 0.0,
@@ -298,6 +305,10 @@ class PagedSimExecutor(SimExecutor):
         """Pages currently pinned — the sim-side analogue of
         PagePool.used_pages, so fleet leak checks read uniformly."""
         return sum(self.held.values())
+
+    def trace_gauges(self) -> Dict[str, int]:
+        return {"pages_in_use": self.used_pages,
+                "pages_total": self.budget.total_pages}
 
     def prefill(self, task: Task) -> float:
         self.held[task.task_id] = self.budget.pages_for(task)
@@ -1369,6 +1380,14 @@ class PagedJaxExecutor(Executor):
             page_bytes=self.store.page_bytes,
             held_states=lambda t: self.states.resident_slot_count(t.task_id),
             **kw)
+
+    def trace_gauges(self) -> Dict[str, int]:
+        g = {"pages_in_use": self.pool.used_pages,
+             "pages_total": self.n_pages}
+        if self.states is not None:
+            g["states_in_use"] = self.states.used_slots
+            g["states_total"] = self.n_state_slots
+        return g
 
     # -- ops --
     def prefill(self, task: Task) -> float:

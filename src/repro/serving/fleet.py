@@ -86,6 +86,10 @@ class FleetRouter:
         self.admissions: Dict[str, int] = {i.name: 0 for i in instances}
         self.spills = 0
         self.degraded = 0
+        # observability (DESIGN.md §13): wired by run_fleet_loop; the
+        # router emits route / defer(reason="tier") events — pure
+        # observation, routing decisions never read it
+        self.trace = None
 
     # -- routing snapshots --
     def view(self, inst: FleetInstance, live: Sequence[Task]) -> InstanceView:
@@ -112,8 +116,8 @@ class FleetRouter:
                 for inst in self.instances]
 
     # -- admission (counted ONCE here, never by instances) --
-    def route(self, task: Task,
-              views: Sequence[InstanceView]) -> FleetInstance:
+    def route(self, task: Task, views: Sequence[InstanceView],
+              now: Optional[float] = None) -> FleetInstance:
         j, degraded = route_request(task, views, self.budget_ms)
         inst = self.instances[j]
         self.admissions[inst.name] += 1
@@ -121,6 +125,17 @@ class FleetRouter:
         task.routed_to = inst.name
         task.served_by = inst.name
         task.served_tier = inst.tier
+        if self.trace is not None:
+            ts = now if now is not None else task.arrival_ms
+            self.trace.emit("route", ts, task.task_id, inst.name,
+                            tier=inst.tier, degraded=degraded,
+                            score=route_score(task, views[j],
+                                              self.budget_ms))
+            if degraded:
+                # the event twin of the merged LoopResult's "tier" defer
+                # bucket (run_fleet_loop folds router.degraded in)
+                self.trace.emit("defer", ts, task.task_id, inst.name,
+                                reason="tier")
         return inst
 
     # -- overflow spill (pull-based: an idle instance steals queued work) --
@@ -163,9 +178,18 @@ class FleetRouter:
                 continue
             drivers[from_inst.name].tracked.remove(t)
             self.spills += 1
-            self.degraded += int(to_inst.tier < t.min_tier)
+            degraded = to_inst.tier < t.min_tier
+            self.degraded += int(degraded)
             t.served_by = to_inst.name     # tokens follow the server;
             t.served_tier = to_inst.tier   # admission stays with routed_to
+            if self.trace is not None:
+                ts = drivers[to_inst.name].now
+                self.trace.emit("route", ts, t.task_id, to_inst.name,
+                                tier=to_inst.tier, degraded=degraded,
+                                spill=True, score=s)
+                if degraded:
+                    self.trace.emit("defer", ts, t.task_id, to_inst.name,
+                                    reason="tier")
             return t
         return None
 
@@ -174,7 +198,8 @@ def run_fleet_loop(router: FleetRouter, workload: Sequence[Task],
                    max_ms: float = 600_000.0,
                    idle_gas: int = 10_000_000,
                    idle_tick_ms: float = 100.0,
-                   max_idle_ticks: int = 600) -> FleetResult:
+                   max_idle_ticks: int = 600,
+                   trace=None) -> FleetResult:
     """Drive every fleet instance over one workload: lowest-clock instance
     steps next (N concurrent devices in one discrete-event frontier),
     arrivals are routed when the frontier reaches them, idle instances
@@ -194,7 +219,10 @@ def run_fleet_loop(router: FleetRouter, workload: Sequence[Task],
     give-up semantics instead of spinning the clock to ``max_ms``."""
     arrivals = sorted(workload, key=lambda t: (t.arrival_ms, t.task_id))
     i = 0
-    drivers = {inst.name: InstanceDriver(inst.scheduler, inst.executor)
+    if trace is not None:
+        router.trace = trace
+    drivers = {inst.name: InstanceDriver(inst.scheduler, inst.executor,
+                                         trace=trace, name=inst.name)
                for inst in router.instances}
     order = {inst.name: k for k, inst in enumerate(router.instances)}
     by_name = {inst.name: inst for inst in router.instances}
@@ -247,6 +275,11 @@ def run_fleet_loop(router: FleetRouter, workload: Sequence[Task],
                [t for t in arrivals if t.served_by == inst.name])
            for inst in router.instances}
     merged = merge_results(per)
+    if router.degraded:
+        # fleet-layer defer cause (DESIGN.md §13): degraded down-tier
+        # routings, counted whether or not a recorder is attached
+        merged.defers_by_reason["tier"] = (
+            merged.defers_by_reason.get("tier", 0) + router.degraded)
     return FleetResult(tasks=list(arrivals), end_ms=merged.end_ms,
                        per_instance=per, merged=merged,
                        admissions=dict(router.admissions),

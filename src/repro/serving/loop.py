@@ -82,6 +82,11 @@ class LoopResult:
     wait_ms: float = 0.0
     swap_overlap_ms: float = 0.0
     pipeline_stalls: int = 0
+    # observability (DESIGN.md §13): defer decisions by cause
+    # (pages | states | time | batch | tier), counted by the scheduler on
+    # every replan whether or not a TraceRecorder is attached — the fleet
+    # layer folds degraded down-tier routings in as "tier".
+    defers_by_reason: Dict[str, int] = dataclasses.field(default_factory=dict)
 
 
 class InstanceDriver:
@@ -95,9 +100,22 @@ class InstanceDriver:
     ``step()`` is the pre-fleet loop body verbatim, so the single-driver
     path stays byte-identical to it."""
 
-    def __init__(self, scheduler: Scheduler, executor: Executor):
+    def __init__(self, scheduler: Scheduler, executor: Executor,
+                 trace=None, name: str = "engine"):
         self.scheduler = scheduler
         self.executor = executor
+        # observability (DESIGN.md §13): an optional TraceRecorder shared
+        # by every layer of this instance. The driver wires it into the
+        # scheduler (defer/admit/spec_grant emission) and stamps every
+        # event on the LOOP clock — under async dispatch, spans are
+        # emitted AFTER fold_wait() so their timestamps are commit-time
+        # and stay causal. trace=None is the zero-overhead default.
+        self.trace = trace
+        self.name = name
+        self.steps = 0
+        if trace is not None:
+            scheduler.trace = trace
+            scheduler.trace_name = name
         self.now = 0.0
         self.n_decode = 0
         self.n_prefill = 0
@@ -126,6 +144,19 @@ class InstanceDriver:
     def deliver(self, task: Task) -> None:
         self.scheduler.on_arrival(task, now=max(self.now, task.arrival_ms))
         self.tracked.append(task)
+        if self.trace is not None:
+            self.trace.emit("arrive", max(self.now, task.arrival_ms),
+                            task.task_id, self.name, task_kind=task.kind,
+                            realtime=task.slo.realtime)
+
+    def _finish(self, t: Task) -> None:
+        """Finish path shared by every action branch: scheduler callback,
+        KV release, and (when tracing) the lifecycle finish mark."""
+        self.scheduler.on_finish(t, self.now)
+        self.executor.release(t)
+        if self.trace is not None:
+            self.trace.emit("finish", self.now, t.task_id, self.name,
+                            tier=t.served_tier, ok=t.slo_met())
 
     def release_dropped(self) -> None:
         # dropped tasks never reach the finish path below, so their KV
@@ -135,6 +166,8 @@ class InstanceDriver:
         for t in self.tracked:
             if t.dropped:
                 self.executor.release(t)
+                if self.trace is not None:
+                    self.trace.emit("drop", self.now, t.task_id, self.name)
             elif not t.finished:
                 still.append(t)
         self.tracked[:] = still
@@ -148,6 +181,9 @@ class InstanceDriver:
         (nothing executed, clock untouched — the caller decides whether
         to jump to the next arrival, spill work in, or stop)."""
         scheduler, executor = self.scheduler, self.executor
+        tr = self.trace
+        g0 = (self.stats.as_dict()
+              if (tr is not None and self.stats is not None) else None)
         t_sched = time.perf_counter()
         action = scheduler.next_action(self.now)  # may drop (reschedule)
         if self.stats is not None:
@@ -155,6 +191,8 @@ class InstanceDriver:
         self.release_dropped()
         if action is None:
             return False
+        t0 = self.now
+        ev = None  # (kind, task_id, args) when tracing; span emitted at end
         if isinstance(action, PrefillAction):
             t = action.task
             ms = executor.prefill(t)
@@ -163,11 +201,12 @@ class InstanceDriver:
             t.prefill_done_ms = self.now
             t.token_times_ms.append(self.now)  # first token at prefill end
             self.n_prefill += 1
+            if tr is not None:
+                ev = ("prefill", t.task_id, {"tokens": t.prompt_len})
             if hasattr(scheduler, "note_prefilled"):
                 scheduler.note_prefilled(t)
             if t.finished:
-                scheduler.on_finish(t, self.now)
-                executor.release(t)
+                self._finish(t)
         elif isinstance(action, PrefillChunkAction):
             t = action.task
             ms, done = executor.prefill_chunk(t, action.n_tokens)
@@ -182,6 +221,9 @@ class InstanceDriver:
             if prog is not None:
                 t.prefill_done_tokens = max(t.prefill_done_tokens,
                                             min(t.prompt_len, int(prog(t))))
+            if tr is not None:
+                ev = ("prefill_chunk", t.task_id,
+                      {"n": action.n_tokens, "done": bool(done)})
             if done:
                 # first token at FINAL chunk completion (TTFT convention)
                 t.prefill_done_tokens = t.prompt_len
@@ -191,8 +233,7 @@ class InstanceDriver:
                 if hasattr(scheduler, "note_prefilled"):
                     scheduler.note_prefilled(t)
                 if t.finished:
-                    scheduler.on_finish(t, self.now)
-                    executor.release(t)
+                    self._finish(t)
         elif isinstance(action, SuspendAction):
             # KV to host (DESIGN.md §7); the flag flips only once the
             # executor's transfer actually lands
@@ -207,10 +248,14 @@ class InstanceDriver:
                     scheduler.note_suspend_failed(t)
                 else:
                     raise
+                if tr is not None:
+                    ev = ("suspend", t.task_id, {"ok": False})
             else:
                 self.now += ms
                 t.suspended = True
                 self.n_suspend += 1
+                if tr is not None:
+                    ev = ("suspend", t.task_id, {"ok": True})
         elif isinstance(action, ResumeAction):
             t = action.task
             try:
@@ -222,10 +267,14 @@ class InstanceDriver:
                     scheduler.note_resume_failed(t)
                 else:
                     raise
+                if tr is not None:
+                    ev = ("resume", t.task_id, {"ok": False})
             else:
                 self.now += ms
                 t.suspended = False
                 self.n_resume += 1
+                if tr is not None:
+                    ev = ("resume", t.task_id, {"ok": True})
         elif isinstance(action, DecodeAction):
             if action.depths is not None:
                 # speculative iteration (DESIGN.md §8): the executor
@@ -236,6 +285,7 @@ class InstanceDriver:
                 ms = executor.decode(action.tasks, action.depths)
                 self.now += ms
                 self.n_decode += 1
+                pre_extra = self.n_spec_extra
                 commits = list(getattr(executor, "last_commits", None)
                                or [1] * len(action.tasks))
                 for t, c in zip(action.tasks, commits):
@@ -245,8 +295,12 @@ class InstanceDriver:
                     if c > 1 and hasattr(scheduler, "note_decoded"):
                         scheduler.note_decoded(t, c)
                     if t.finished:
-                        scheduler.on_finish(t, self.now)
-                        executor.release(t)
+                        self._finish(t)
+                if tr is not None:
+                    ev = ("decode", -1,
+                          {"n": len(action.tasks),
+                           "depth": max(action.depths),
+                           "spec_extra": self.n_spec_extra - pre_extra})
             else:
                 ms = executor.decode(action.tasks)
                 self.now += ms
@@ -254,9 +308,32 @@ class InstanceDriver:
                 for t in action.tasks:
                     t.token_times_ms.append(self.now)
                     if t.finished:
-                        scheduler.on_finish(t, self.now)
-                        executor.release(t)
+                        self._finish(t)
+                if tr is not None:
+                    ev = ("decode", -1,
+                          {"n": len(action.tasks), "depth": 0,
+                           "spec_extra": 0})
         self.fold_wait()
+        if tr is not None:
+            if ev is not None:
+                kind, tid, args = ev
+                if g0 is not None:
+                    # host/device gap deltas measured across this action
+                    # (schedule time included — g0 precedes next_action)
+                    end = self.stats.as_dict()
+                    for k in ("schedule_ms", "dispatch_ms", "wait_ms",
+                              "swap_overlap_ms"):
+                        args[k] = end[k] - g0[k]
+                # span starts at the pre-action clock; under async dispatch
+                # the folded commit wait is inside dur, so spans on one
+                # track stay monotonic and non-overlapping
+                tr.push(kind, t0, tid, self.name, self.now - t0, args)
+            self.steps += 1
+            if tr.metrics_every and self.steps % tr.metrics_every == 0:
+                tr.sample(self.now, self.name, executor=self.executor,
+                          scheduler=self.scheduler,
+                          resident=len(self.live_tasks()),
+                          suspends=self.n_suspend, resumes=self.n_resume)
         return True
 
     def drain(self) -> None:
@@ -293,7 +370,10 @@ class InstanceDriver:
                           dispatch_ms=gaps.get("dispatch_ms", 0.0),
                           wait_ms=gaps.get("wait_ms", 0.0),
                           swap_overlap_ms=gaps.get("swap_overlap_ms", 0.0),
-                          pipeline_stalls=stalls)
+                          pipeline_stalls=stalls,
+                          defers_by_reason=dict(
+                              getattr(self.scheduler, "defers_by_reason",
+                                      None) or {}))
 
 
 def merge_results(per_instance: Dict[str, LoopResult]) -> LoopResult:
@@ -306,6 +386,10 @@ def merge_results(per_instance: Dict[str, LoopResult]) -> LoopResult:
     if not results:
         return LoopResult(tasks=[], end_ms=0.0, decode_iterations=0,
                           prefills=0)
+    defers: Dict[str, int] = {}
+    for r in results:
+        for k, v in r.defers_by_reason.items():
+            defers[k] = defers.get(k, 0) + v
     return LoopResult(
         tasks=[t for r in results for t in r.tasks],
         end_ms=max(r.end_ms for r in results),
@@ -322,15 +406,17 @@ def merge_results(per_instance: Dict[str, LoopResult]) -> LoopResult:
         dispatch_ms=sum(r.dispatch_ms for r in results),
         wait_ms=sum(r.wait_ms for r in results),
         swap_overlap_ms=sum(r.swap_overlap_ms for r in results),
-        pipeline_stalls=sum(r.pipeline_stalls for r in results))
+        pipeline_stalls=sum(r.pipeline_stalls for r in results),
+        defers_by_reason=defers)
 
 
 def run_serving_loop(scheduler: Scheduler, executor: Executor,
                      workload: Sequence[Task], max_ms: float = 600_000.0,
-                     idle_gas: int = 10_000_000) -> LoopResult:
+                     idle_gas: int = 10_000_000,
+                     trace=None) -> LoopResult:
     arrivals = sorted(workload, key=lambda t: (t.arrival_ms, t.task_id))
     i = 0
-    drv = InstanceDriver(scheduler, executor)
+    drv = InstanceDriver(scheduler, executor, trace=trace)
     gas = idle_gas
 
     def deliver_arrivals(upto: float) -> None:

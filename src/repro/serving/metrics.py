@@ -87,6 +87,76 @@ def per_tier(tasks: Sequence[Task]) -> Dict[str, Attainment]:
     return {name: summarize(ts)["all"] for name, ts in sorted(groups.items())}
 
 
+# --------------------------------------- SLO-violation attribution (§13)
+
+ATTRIBUTION_BUCKETS = ("routing", "queueing", "prefill_interference",
+                       "swap_stall", "decode_contention")
+
+
+def _attribute(t: Task, evs: Sequence) -> str:
+    """Classify ONE violated request into its dominant cause. Decision
+    tree over the lifecycle stream (DESIGN.md §13):
+
+      1. tier floor unmet           -> routing (the fleet degraded it;
+         nothing the serving instance did could have attained it)
+      2. first token late / never   -> the time went either to waiting
+         for admission (queueing: gap from arrival to the task's first
+         own engine span) or to being stretched by co-scheduled work
+         after service began (prefill_interference: first-span-to-first-
+         token time minus the task's own span durations) — whichever
+         share is larger names the bucket; a request with no engine
+         spans at all never got service, which is queueing by definition
+      3. first token on time, decode phase missed (TPOT / deadline) ->
+         swap_stall when the request was ever suspended to host
+         (DESIGN.md §7), decode_contention otherwise (its columns ran
+         slow/starved under the co-resident batch)
+    """
+    if not t.tier_met():
+        return "routing"
+    own = [e for e in evs
+           if e.kind in ("prefill", "prefill_chunk", "decode",
+                         "suspend", "resume")]
+    pre = [e for e in own if e.kind in ("prefill", "prefill_chunk")]
+    first_token_late = (t.ttft_ms is None) or (t.ttft_ms > t.slo.ttft_ms)
+    if first_token_late:
+        if not pre:
+            return "queueing"
+        first_start = min(e.ts for e in pre)
+        wait = first_start - t.arrival_ms
+        end = (t.prefill_done_ms if t.prefill_done_ms is not None
+               else max(e.ts + e.dur for e in pre))
+        stretch = (end - first_start) - sum(e.dur for e in pre)
+        return "queueing" if wait >= stretch else "prefill_interference"
+    suspended = any(e.kind == "suspend" and e.args.get("ok", True)
+                    for e in evs)
+    return "swap_stall" if suspended else "decode_contention"
+
+
+def slo_attribution(tasks: Sequence[Task],
+                    events: Sequence) -> Dict[str, object]:
+    """Partition the violated-request set into attribution buckets
+    (DESIGN.md §13). ``events`` is a TraceRecorder's stream (or any
+    sequence of objects with .kind/.task_id/.ts/.dur/.args); with an
+    EMPTY stream every non-routing violation degrades to 'queueing' —
+    attribution without a trace is a statement of ignorance, not a
+    crash. Returns buckets (every key present), the violation total
+    (== sum of buckets: each violated request lands in exactly one),
+    and the per-task labels."""
+    by_task: Dict[int, List] = {}
+    for e in events:
+        if e.task_id >= 0:
+            by_task.setdefault(e.task_id, []).append(e)
+    buckets = {b: 0 for b in ATTRIBUTION_BUCKETS}
+    by_id: Dict[int, str] = {}
+    for t in tasks:
+        if t.slo_met():
+            continue
+        label = _attribute(t, by_task.get(t.task_id, []))
+        by_id[t.task_id] = label
+        buckets[label] += 1
+    return {"buckets": buckets, "violations": len(by_id), "by_task": by_id}
+
+
 def per_kind_tpot(tasks: Sequence[Task]) -> Dict[str, Dict[str, float]]:
     """Table II style: actual TPOT / rate / attainment per task kind."""
     kinds: Dict[str, List[Task]] = {}

@@ -1,0 +1,231 @@
+"""Observability spine (DESIGN.md §13): the trace contract as unit tests.
+
+Three properties, mirrored at benchmark scale by the observability CI
+gate (benchmarks/observability.py):
+
+  * read-only    — the recorder never feeds back into scheduling: the
+    same workload through the same engine, traced and untraced, yields
+    identical policy counters and per-token timestamps (sim engines) and
+    byte-identical greedy token streams (real JAX engine);
+  * conservation — ``replay_counters`` over the event stream reproduces
+    the LoopResult counters EXACTLY, on a full-featured engine loop and
+    on a 2-instance fleet loop folded into the merged result;
+  * bounded      — the ring drops (and counts) rows instead of growing,
+    and the Perfetto export round-trips through ``json.load`` with
+    per-track monotonically non-overlapping spans.
+"""
+import json
+
+from repro.core.latency_model import MeasuredLatencyModel, paper_fig1_model
+from repro.core.schedulers import SliceScheduler
+from repro.data.workload import poisson_workload
+from repro.serving.executor import PagedSimExecutor
+from repro.serving.fleet import SimTier, run_fleet_loop, sim_fleet
+from repro.serving.loop import run_serving_loop
+from repro.serving.metrics import ATTRIBUTION_BUCKETS, slo_attribution
+from repro.serving.trace import (SPAN_KINDS, TraceRecorder, events_conserved,
+                                 replay_counters)
+
+LAT = paper_fig1_model()
+
+
+def _tasks(seed=3, rate=2.0, duration_s=20.0):
+    tasks = poisson_workload(rate_per_s=rate, duration_s=duration_s,
+                             seed=seed, realtime_frac=0.4,
+                             voice_output_len=64, qa_output_len=64)
+    for i, t in enumerate(tasks):
+        # pin ids: sim draft-acceptance streams seed from task_id, so the
+        # traced/untraced runs must not depend on global counter state
+        t.task_id = 10_000 * seed + i
+    return tasks
+
+
+def _engine_run(trace=None, chunk=32, seed=3):
+    """Memory-starved SLICE run with every event source armed: kv_swap,
+    spec decode, chunked prefill (``chunk=None`` = atomic, the regime
+    where suspend/resume actually fire)."""
+    ex = PagedSimExecutor(LAT, total_pages=48, page_size=16)
+    sched = SliceScheduler(LAT, page_budget=ex.budget, kv_swap=True,
+                           spec_decode=True, prefill_chunk=chunk,
+                           drop_expired_realtime=False)
+    return run_serving_loop(sched, ex, _tasks(seed=seed), trace=trace)
+
+
+def _fingerprint(res):
+    return (res.decode_iterations, res.prefills, res.prefill_chunks,
+            res.suspends, res.resumes, res.spec_extra_tokens,
+            res.swapped_bytes, dict(res.defers_by_reason),
+            [(t.task_id, t.finished, t.tokens_done, t.ttft_ms,
+              tuple(t.token_times_ms)) for t in res.tasks])
+
+
+# ------------------------------------------------------------- read-only
+
+def test_untraced_run_identical_to_traced():
+    """Tracing must observe, never perturb: identical counters, defer
+    ledger and per-token timestamps with the recorder on vs off."""
+    tr = TraceRecorder()
+    traced = _engine_run(trace=tr)
+    plain = _engine_run(trace=None)
+    assert len(tr) > 0
+    assert _fingerprint(traced) == _fingerprint(plain)
+
+
+def test_trace_events_readonly_payloads():
+    """Event payloads are shared/interned dicts (defer reasons); mutating
+    a consumer-side copy must be the consumer's bug, so the recorder
+    hands out the SAME dict for every defer of one reason."""
+    tr = TraceRecorder()
+    _engine_run(trace=tr, chunk=None)
+    defers = [e for e in tr.events if e.kind == "defer"]
+    assert defers
+    by_reason = {}
+    for e in defers:
+        assert e.args["reason"] in ("pages", "states", "time", "batch")
+        prev = by_reason.setdefault(e.args["reason"], e.args)
+        assert prev is e.args
+
+
+def test_jax_engine_streams_identical_traced():
+    """Real JAX engine: greedy token streams byte-identical traced vs
+    untraced (the sim fingerprint proves counters; this proves tokens)."""
+    from helpers import make_paged_engine, reduced_cfg
+
+    def run(trace):
+        ex = make_paged_engine(reduced_cfg(), seed=0)
+        lat = ex.latency_model()     # probe tasks release before the hook
+        sched = SliceScheduler(lat, page_budget=ex.page_budget())
+        streams = {}
+        orig_release = ex.release
+        # snapshot each stream at release, before the engine drops it
+        def release(task):
+            streams[task.task_id] = tuple(ex.generated_tokens(task))
+            orig_release(task)
+        ex.release = release
+        tasks = poisson_workload(rate_per_s=4.0, duration_s=2.0, seed=5)
+        for i, t in enumerate(tasks):
+            t.task_id = 500 + i
+            t.slo.tpot_ms *= 50.0
+            t.slo.ttft_ms *= 50.0
+            t.prompt_len = min(t.prompt_len, 16)
+            t.output_len = min(t.output_len, 8)
+        run_serving_loop(sched, ex, tasks, trace=trace)
+        assert streams and any(len(s) > 1 for s in streams.values())
+        return streams
+
+    assert run(TraceRecorder()) == run(None)
+
+
+# ---------------------------------------------------------- conservation
+
+def test_events_conserved_engine_loop():
+    """Replaying the stream reproduces the LoopResult counters exactly,
+    in both prefill regimes (chunked, and atomic where swap fires)."""
+    for chunk in (32, None):
+        tr = TraceRecorder()
+        res = _engine_run(trace=tr, chunk=chunk)
+        assert tr.dropped == 0
+        assert events_conserved(tr.events, res)
+    # the atomic-prefill regime must actually exercise suspend/resume,
+    # or the swap half of the conservation check was vacuous
+    assert res.suspends > 0 and res.resumes > 0
+    kinds = {e.kind for e in tr.events}
+    assert {"arrive", "admit", "defer", "decode", "suspend", "resume",
+            "finish"} <= kinds
+
+
+def test_events_conserved_fleet_loop():
+    """2-instance fleet under one recorder: per-track streams fold into
+    the MERGED LoopResult, and each track replays its own instance."""
+    small = MeasuredLatencyModel(
+        [(b, ms * 0.4) for b, ms in LAT._bs],
+        prefill_samples=[(n, ms * 0.4) for n, ms in LAT._ps])
+    router = sim_fleet([SimTier("small", 0, small, quality=0.8),
+                        SimTier("large", 1, LAT, quality=1.0)],
+                       total_pages=64)
+    tasks = _tasks(seed=7)
+    for t in tasks:
+        if t.kind == "qa":
+            t.min_tier = 1
+    tr = TraceRecorder()
+    res = run_fleet_loop(router, tasks, max_ms=3e7, trace=tr)
+    assert events_conserved(tr.events, res.merged)
+    tracks = [i for i in tr.instances() if i != "fleet"]
+    assert len(tracks) == 2
+    merged = replay_counters(tr.events)
+    per = [replay_counters(tr.events, instance=i) for i in tr.instances()]
+    assert merged["finished"] == sum(p["finished"] for p in per)
+    assert merged["decode_iterations"] == sum(p["decode_iterations"]
+                                              for p in per)
+
+
+def test_attribution_partitions_violations():
+    """Every violated request lands in exactly ONE bucket; attained and
+    unfinished-but-attained requests land in none."""
+    tr = TraceRecorder()
+    res = _engine_run(trace=tr, chunk=None)
+    att = slo_attribution(res.tasks, tr.events)
+    assert att["violations"] > 0
+    assert sum(att["buckets"].values()) == att["violations"]
+    assert set(att["buckets"]) == set(ATTRIBUTION_BUCKETS)
+    assert len(att["by_task"]) == att["violations"]
+    violated = {t.task_id for t in res.tasks if not t.slo_met()}
+    assert set(att["by_task"]) == violated
+
+
+def test_attribution_without_trace_degrades_to_queueing():
+    """An empty stream is a statement of ignorance, not a crash: with no
+    spans, a late first token can only be blamed on queueing (never
+    prefill interference) and a missed decode phase never on swap."""
+    res = _engine_run(trace=None, chunk=None)
+    att = slo_attribution(res.tasks, [])
+    assert sum(att["buckets"].values()) == att["violations"]
+    assert att["buckets"]["swap_stall"] == 0
+    assert att["buckets"]["prefill_interference"] == 0
+
+
+# ------------------------------------------------------ bounded + export
+
+def test_ring_wraps_and_counts_drops():
+    tr = TraceRecorder(capacity=64)
+    _engine_run(trace=tr)
+    assert len(tr) == 64
+    assert tr.dropped > 0
+
+
+def test_metrics_snapshots_sampled():
+    tr = TraceRecorder(metrics_every=8)
+    res = _engine_run(trace=tr, chunk=None)
+    assert tr.snapshots
+    last = tr.snapshots[-1]
+    assert last.defers_by_reason == dict(res.defers_by_reason)
+    assert last.suspends == res.suspends
+    ts = [s.ts for s in tr.snapshots]
+    assert ts == sorted(ts)
+
+
+def test_perfetto_round_trip(tmp_path):
+    """Chrome-trace JSON loads back; per-track "X" spans sorted by start
+    never overlap (the loop clock only moves forward); the drop counter
+    is carried in otherData; flow arrows appear per finished request."""
+    tr = TraceRecorder()
+    res = _engine_run(trace=tr, chunk=None)
+    path = tmp_path / "trace.json"
+    rows = tr.export_perfetto(str(path))
+    doc = json.loads(path.read_text())
+    evs = doc["traceEvents"]
+    assert rows == len(evs)
+    assert doc["otherData"]["dropped_events"] == 0
+    tracks = {}
+    for e in evs:
+        if e.get("ph") == "X":
+            assert e["name"] in SPAN_KINDS
+            tracks.setdefault(e["tid"], []).append((e["ts"], e["dur"]))
+    assert tracks
+    for spans in tracks.values():
+        spans.sort()
+        for (t0, d0), (t1, _) in zip(spans, spans[1:]):
+            assert t1 >= t0 + d0 - 1e-6
+    flows = [e for e in evs if e.get("cat") == "req-flow"]
+    finished = sum(t.finished for t in res.tasks)
+    assert sum(e["ph"] == "s" for e in flows) >= finished
